@@ -1,0 +1,309 @@
+"""Post-compile HLO text analyzer → roofline terms.
+
+Why text parsing: ``compiled.cost_analysis()`` counts a ``while`` body ONCE
+(verified empirically — scan FLOPs = unroll/N), so any scan-over-layers or
+grad-accumulation loop would be undercounted N×.  This module parses the
+partitioned HLO, builds the computation call graph, multiplies each
+computation
+by the product of enclosing while trip counts (parsed from the loop-condition
+constant), and attributes:
+
+* dot/convolution FLOPs (2 · prod(out) · prod(contracting)),
+* fusion/op HBM bytes (operands + outputs of top-level ops — matching XLA's
+  post-fusion "bytes accessed" convention),
+* collective bytes with per-kind wire conventions:
+    all-reduce 2·size, all-gather (out−in), reduce-scatter in,
+    all-to-all in, collective-permute in.
+
+All numbers are PER-DEVICE (the module is the per-device SPMD program).
+Hardware constants: TPU v5e-like (assignment): 197 TFLOP/s bf16, 819 GB/s
+HBM, 50 GB/s/link ICI.
+"""
+
+from __future__ import annotations
+
+import math
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "token": 0, "opaque": 0, "s4": 1, "u4": 1, "f8e4m3fn": 1,
+    "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\(")
+_CALL_ATTR_RE = re.compile(
+    r"(?:condition|body|calls|to_apply|branch_computations)=\{?%?([\w.\-]+(?:,\s*%?[\w.\-]+)*)\}?")
+
+
+def _parse_shape(type_str: str) -> List[Tuple[str, List[int]]]:
+    """'bf16[8,128]{1,0}' or tuple '(f32[2], s32[])' -> [(dtype, dims), ...]"""
+    out = []
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        out.append((dt, [int(x) for x in dims.split(",") if x]))
+    return out
+
+
+def _shape_bytes(type_str: str) -> int:
+    return sum(_DTYPE_BYTES[dt] * math.prod(dims) if dims else _DTYPE_BYTES[dt]
+               for dt, dims in _parse_shape(type_str))
+
+
+@dataclass
+class Op:
+    name: str
+    kind: str
+    type_str: str
+    line: str
+
+
+@dataclass
+class Computation:
+    name: str
+    ops: List[Op] = field(default_factory=list)
+    multiplier: float = 0.0  # times executed; filled by propagation
+
+
+class HloModule:
+    def __init__(self, text: str):
+        self.computations: Dict[str, Computation] = {}
+        self.entry: Optional[str] = None
+        self.op_types: Dict[str, str] = {}  # op name -> type str (shapes)
+        self._parse(text)
+        self._propagate()
+
+    # -- parsing ----------------------------------------------------------
+    def _parse(self, text: str):
+        cur: Optional[Computation] = None
+        for line in text.splitlines():
+            stripped = line.strip()
+            header = re.match(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\((.*)\)\s*->", stripped)
+            if header and stripped.endswith("{"):
+                cur = Computation(header.group(2))
+                self.computations[cur.name] = cur
+                if header.group(1):
+                    self.entry = cur.name
+                continue
+            if cur is None or stripped.startswith("}"):
+                if stripped.startswith("}"):
+                    cur = None
+                continue
+            m = _OP_RE.match(line)
+            if not m:
+                continue
+            name, type_str, kind = m.groups()
+            cur.ops.append(Op(name, kind, type_str, stripped))
+            self.op_types[name] = type_str
+
+    # -- trip counts ------------------------------------------------------
+    def _trip_count(self, cond_name: str) -> int:
+        comp = self.computations.get(cond_name)
+        if comp is None:
+            return 1
+        consts = [int(m.group(1)) for op in comp.ops
+                  for m in re.finditer(r"constant\((\d+)\)", op.line)]
+        return max(consts) if consts else 1
+
+    def _propagate(self):
+        for c in self.computations.values():
+            c.multiplier = 0.0
+        entry = self.computations.get(self.entry)
+        if entry is None:  # fall back: treat all as executed once
+            for c in self.computations.values():
+                c.multiplier = 1.0
+            return
+        seen = set()
+
+        def visit(comp: Computation, mult: float):
+            comp.multiplier += mult
+            key = comp.name
+            if key in seen and comp.multiplier > 1e12:
+                return
+            for op in comp.ops:
+                for attr in _CALL_ATTR_RE.finditer(op.line):
+                    names = [n.strip().lstrip("%")
+                             for n in attr.group(1).split(",")]
+                    if op.kind == "while":
+                        mw = re.search(r"condition=%?([\w.\-]+),\s*body=%?([\w.\-]+)",
+                                       op.line)
+                        if mw:
+                            trips = self._trip_count(mw.group(1))
+                            visit_once(mw.group(2), mult * trips)
+                            visit_once(mw.group(1), mult * (trips + 1))
+                        break
+                    for n in names:
+                        visit_once(n, mult)
+
+        def visit_once(name: str, mult: float):
+            comp = self.computations.get(name)
+            if comp is not None:
+                visit(comp, mult)
+
+        visit(entry, 1.0)
+        # computations never reached (dead or unhandled refs): count once
+        for c in self.computations.values():
+            if c.multiplier == 0.0:
+                c.multiplier = 1.0
+
+    # -- analyses ---------------------------------------------------------
+
+    def _operand_shapes(self, op: Op) -> List[str]:
+        """Type strings of the op's operands (resolved by name)."""
+        args = re.search(r"\(([^)]*)\)", op.line[op.line.index(op.kind):])
+        if not args:
+            return []
+        names = re.findall(r"%([\w.\-]+)", args.group(1))
+        return [self.op_types[n] for n in names if n in self.op_types]
+
+    def dot_flops(self) -> float:
+        total = 0.0
+        for comp in self.computations.values():
+            if comp.multiplier == 0:
+                continue
+            for op in comp.ops:
+                if op.kind not in ("dot", "convolution"):
+                    continue
+                out = _parse_shape(op.type_str)
+                out_elems = sum(math.prod(d) if d else 1 for _, d in out)
+                contract = 1
+                mc = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.line)
+                if mc:
+                    lhs_types = self._operand_shapes(op)
+                    if lhs_types:
+                        lhs = _parse_shape(lhs_types[0])
+                        if lhs:
+                            dims = lhs[0][1]
+                            idxs = [int(x) for x in mc.group(1).split(",") if x]
+                            contract = math.prod(dims[i] for i in idxs) or 1
+                total += comp.multiplier * 2.0 * out_elems * contract
+        return total
+
+    def hbm_bytes_tpu_model(self) -> float:
+        """HBM traffic under a TPU-fusion model.
+
+        The dry-run compiles on the CPU backend, whose HLO barely fuses —
+        counting every top-level op's operands+outputs over-states TPU HBM
+        traffic ~50× (measured).  On TPU, elementwise chains (norms, rope,
+        softmax, residual adds) fuse into their matmul neighbours, so the
+        irreducible traffic is: matmul/conv operands+outputs, collective
+        payloads, explicit gather/scatter/cache-update ops, and program
+        arguments/outputs (optimizer/param streams) — which is what we sum,
+        trip-scaled.  This is a *lower-bound-flavored* estimate; the full
+        op-granularity sum is reported as ``hbm_bytes_upper`` for contrast.
+        """
+        matmul = {"dot", "convolution"}
+        coll = {"all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute", "all-reduce-start", "all-gather-start"}
+        slice_like = {"dynamic-slice", "gather"}
+        update_like = {"dynamic-update-slice", "scatter"}
+        total = 0.0
+        for comp in self.computations.values():
+            if comp.multiplier == 0:
+                continue
+            for op in comp.ops:
+                if op.kind in matmul or op.kind in coll:
+                    # full operands read + output written
+                    b = _shape_bytes(op.type_str)
+                    b += sum(_shape_bytes(t) for t in self._operand_shapes(op))
+                elif op.kind in slice_like:
+                    # only the sliced/gathered window moves, not the base
+                    b = 2 * _shape_bytes(op.type_str)
+                elif op.kind in update_like:
+                    # in-place on TPU: read update + write the same window
+                    ops_t = self._operand_shapes(op)
+                    b = 2 * _shape_bytes(ops_t[1]) if len(ops_t) > 1 \
+                        else _shape_bytes(op.type_str)
+                else:
+                    continue
+                total += comp.multiplier * b
+        return total
+
+    def hbm_bytes(self) -> float:
+        """Post-fusion bytes: operands + outputs of top-level ops, skipping
+        pure control/metadata ops and fused subcomputations (their caller's
+        fusion op carries the bytes)."""
+        skip = {"parameter", "constant", "tuple", "get-tuple-element",
+                "bitcast", "while", "conditional", "call", "after-all",
+                "partition-id", "replica-id"}
+        fused_subs = set()
+        for comp in self.computations.values():
+            for op in comp.ops:
+                if op.kind == "fusion":
+                    m = re.search(r"calls=%?([\w.\-]+)", op.line)
+                    if m:
+                        fused_subs.add(m.group(1))
+        total = 0.0
+        for comp in self.computations.values():
+            if comp.name in fused_subs or comp.multiplier == 0:
+                continue
+            for op in comp.ops:
+                if op.kind in skip:
+                    continue
+                b = _shape_bytes(op.type_str)
+                b += sum(_shape_bytes(t) for t in self._operand_shapes(op))
+                total += comp.multiplier * b
+        return total
+
+    def collective_bytes(self) -> Dict[str, float]:
+        """Wire bytes per collective kind (per device), trip-scaled."""
+        out: Dict[str, float] = defaultdict(float)
+        for comp in self.computations.values():
+            if comp.multiplier == 0:
+                continue
+            for op in comp.ops:
+                kind = op.kind.replace("-start", "")
+                if kind not in ("all-reduce", "all-gather", "reduce-scatter",
+                                "all-to-all", "collective-permute"):
+                    continue
+                out_b = _shape_bytes(op.type_str)
+                in_b = sum(_shape_bytes(t) for t in self._operand_shapes(op))
+                if kind == "all-reduce":
+                    wire = 2.0 * in_b
+                elif kind == "all-gather":
+                    wire = max(out_b - in_b, 0)
+                else:
+                    wire = in_b
+                out[kind] += comp.multiplier * wire
+        return dict(out)
+
+
+def analyze(hlo_text: str, *, n_chips: int,
+            cost_analysis: Optional[dict] = None,
+            io_bytes: float = 0.0) -> dict:
+    mod = HloModule(hlo_text)
+    coll = mod.collective_bytes()
+    coll_total = sum(coll.values())
+    flops = mod.dot_flops()
+    bytes_hbm = mod.hbm_bytes_tpu_model() + io_bytes
+    res = {
+        "parsed_dot_flops_per_device": flops,
+        "parsed_hbm_bytes_per_device": bytes_hbm,
+        "hbm_bytes_upper_per_device": mod.hbm_bytes(),
+        "collective_bytes_per_device": coll_total,
+        "collective_breakdown": coll,
+        "compute_s": flops / PEAK_FLOPS,
+        "memory_s": bytes_hbm / HBM_BW,
+        "collective_s": coll_total / ICI_BW,
+        "n_chips": n_chips,
+    }
+    terms = {"compute": res["compute_s"], "memory": res["memory_s"],
+             "collective": res["collective_s"]}
+    res["bottleneck"] = max(terms, key=terms.get)
+    res["step_time_lower_bound_s"] = max(terms.values())
+    if cost_analysis:
+        res["xla_cost_flops_unscaled"] = cost_analysis.get("flops", 0.0)
+        res["xla_cost_bytes_unscaled"] = cost_analysis.get("bytes accessed", 0.0)
+    return res

@@ -1,0 +1,53 @@
+"""Batched serving example: prefill a batch of prompts, decode with KV
+caches, verify incremental decode against the full forward pass.
+
+    PYTHONPATH=src python examples/serve_batched.py [--arch gemma2-9b]
+
+Uses the reduced smoke config of any assigned arch (default exercises the
+sliding-window ring-buffer cache path).
+"""
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.launch.serve import generate
+from repro.models import lm
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma2-9b")
+    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=8)
+    args = ap.parse_args()
+
+    cfg = configs.get_smoke(args.arch)
+    if cfg.arch_class == "encdec":
+        raise SystemExit("decoder-only example; see tests for enc-dec decode")
+    key = jax.random.key(0)
+    params = lm.init(cfg, key)
+    tokens = jax.random.randint(key, (args.batch, args.prompt_len), 0,
+                                cfg.vocab)
+    out = generate(cfg, params, tokens, args.gen)
+    print(f"[{cfg.name}] generated {out.shape}")
+
+    # cross-check: greedy decode must match argmax of the full forward pass
+    full = tokens
+    for i in range(args.gen):
+        logits, _, _ = lm.forward(cfg, params, full, mode="train")
+        nxt = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+        full = jnp.concatenate([full, nxt], axis=1)
+    ref = full[:, args.prompt_len:]
+    match = float((ref == out).mean())
+    print(f"incremental-vs-full greedy agreement: {match*100:.1f}%")
+    assert match > 0.9, "KV-cache decode diverged from full forward"
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,11 @@
+# The paper's primary contribution: GWT — wavelet-domain optimizer-state
+# compression (Algorithm 1) + the Haar transform substrate it builds on.
+from repro.core.haar import (haar_forward, haar_inverse, haar_forward_packed,
+                             haar_inverse_packed, haar_matrix, lowpass,
+                             pack, unpack, detail_scale_upsample)
+from repro.core.gwt import gwt, state_memory_bytes
+from repro.core.limiter import limit
+
+__all__ = ["haar_forward", "haar_inverse", "haar_forward_packed",
+           "haar_inverse_packed", "haar_matrix", "lowpass", "pack", "unpack",
+           "detail_scale_upsample", "gwt", "state_memory_bytes", "limit"]

@@ -1,0 +1,171 @@
+"""GWT — Gradient Wavelet Transform optimizer (the paper's Algorithm 1).
+
+Per eligible 2-D (or stacked ``(L, m, n)``) weight ``W`` with transform axis
+width ``n`` divisible by ``2^l``::
+
+    [A_t, D_t]  = G_t · H^l                      (multi-level DHT)
+    M^R, V^R    = host-optimizer moments on A_t  (memory: shapes of A_t)
+    Ã_t         = M^R / (√V^R + ε)
+    D̃_k        = D_k · upsample(1/(√V^R+ε))     (scale consistency)
+    G̃_t        = [Ã_t, D̃_t] · Hᵀ               (inverse DHT — full rank!)
+    G̃_t        = NormGrowthLimiter(G̃_t)         (γ = 1.01)
+    W_{t+1}     = W_t − η_t · α · G̃_t            (η_t: bias-corrected lr)
+
+Ineligible leaves (embeddings, lm-head, norms, 1-D) run plain Adam at the
+base lr — the paper's module-wise strategy.  ``level=0`` reduces exactly to
+the host optimizer (tested).
+
+``impl='pallas'`` routes eligible-leaf updates through the fused TPU kernel
+(`repro.kernels.gwt_adam`); ``'jnp'`` (default, CPU-safe) uses the butterfly.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import haar, limiter
+from repro.optim import hosts as hosts_lib
+from repro.optim.base import Optimizer, default_eligible, flatten_with_paths
+from repro.optim.schedules import Schedule, constant
+
+
+class _Mode:
+    PLAIN = "plain"       # host-ineligible: plain Adam on the full tensor
+    LAST = "gwt_last"     # DHT along axis -1
+    FIRST = "gwt_first"   # DHT along axis -2 (transposed)
+
+
+def _leaf_mode(path: str, leaf, level: int,
+               eligible: Callable[[str, jax.Array], bool]) -> str:
+    block = 1 << level
+    if level == 0 or not eligible(path, leaf):
+        return _Mode.PLAIN
+    if leaf.ndim >= 2 and leaf.shape[-1] % block == 0:
+        return _Mode.LAST
+    if leaf.ndim >= 2 and leaf.shape[-2] % block == 0:
+        return _Mode.FIRST
+    return _Mode.PLAIN
+
+
+def gwt(lr: Schedule | float,
+        level: int = 2,
+        alpha: float = 0.25,
+        host: str = "adam",
+        host_kwargs: Optional[dict] = None,
+        gamma: float = limiter.DEFAULT_GAMMA,
+        use_limiter: bool = True,
+        eligible: Callable[[str, jax.Array], bool] = None,
+        weight_decay: float = 0.0,
+        state_dtype=jnp.float32,
+        wavelet: str = "haar",
+        impl: str = "jnp") -> Optimizer:
+    """Build the GWT optimizer. ``host`` in {'adam','adam_mini','muon'};
+    ``wavelet`` in {'haar' (paper), 'db2' (beyond-paper Daubechies-4)}."""
+    if wavelet not in ("haar", "db2"):
+        raise ValueError(f"unknown wavelet {wavelet!r}")
+    fwd = haar.haar_forward if wavelet == "haar" else haar.db2_forward
+    inv = haar.haar_inverse if wavelet == "haar" else haar.db2_inverse
+    if isinstance(lr, (int, float)):
+        lr = constant(lr)
+    host_kwargs = dict(host_kwargs or {})
+    host_kwargs.setdefault("state_dtype", state_dtype)
+    h = hosts_lib.make_host(host, **host_kwargs)
+    # Ineligible leaves always run Adam (paper's module-wise strategy), even
+    # for a MUON host (matches MUON-for-2D + Adam-for-rest practice).
+    plain = hosts_lib.adam(state_dtype=state_dtype) if host == "muon" else h
+    elig = eligible or default_eligible
+
+    def init(params):
+        paths, leaves, _ = flatten_with_paths(params)
+        leaf_states = []
+        for path, p in zip(paths, leaves):
+            mode = _leaf_mode(path, p, level, elig)
+            if mode == _Mode.PLAIN:
+                leaf_states.append({"host": plain.init(p)})
+            else:
+                g_shape = p.shape if mode == _Mode.LAST \
+                    else p.shape[:-2] + (p.shape[-1], p.shape[-2])
+                a_shape = g_shape[:-1] + (g_shape[-1] >> level,)
+                leaf_states.append({
+                    "host": h.init(jax.ShapeDtypeStruct(a_shape, state_dtype)),
+                    "prev_norm": jnp.zeros((), jnp.float32),
+                })
+        return {"step": jnp.zeros((), jnp.int32), "leaves": tuple(leaf_states)}
+
+    def _gwt_core(g, hstate, step):
+        a, details = fwd(g, level)
+        precond_a, dscale, lr_mult, hstate = h.update(a, hstate, step)
+        if dscale is None:
+            tilde_d = list(details)
+        else:
+            tilde_d = [d * haar.detail_scale_upsample(dscale, level, level - i)
+                       for i, d in enumerate(details)]
+        g_tilde = inv(precond_a, tilde_d)
+        return g_tilde, lr_mult, hstate
+
+    def update(grads, state, params):
+        step = state["step"]
+        lr_t = lr(step)
+        paths, gleaves, treedef = flatten_with_paths(grads)
+        pleaves = jax.tree_util.tree_leaves(params)
+        new_params, new_states = [], []
+        for path, g, lstate, p in zip(paths, gleaves, state["leaves"], pleaves):
+            mode = _leaf_mode(path, p, level, elig)
+            out = dict(lstate)
+            if mode == _Mode.PLAIN:
+                delta, _, lr_mult, out["host"] = plain.update(g, lstate["host"], step)
+                eff_alpha = 1.0
+            else:
+                gt = g if mode == _Mode.LAST else jnp.swapaxes(g, -1, -2)
+                if impl == "pallas" and h.name == "adam" and wavelet == "haar":
+                    from repro.kernels.gwt_adam import ops as gwt_ops  # lazy
+                    g_tilde, lr_mult, out["host"] = gwt_ops.fused_update(
+                        gt, lstate["host"], step, level=level)
+                else:
+                    g_tilde, lr_mult, out["host"] = _gwt_core(gt, lstate["host"], step)
+                if mode == _Mode.FIRST:
+                    g_tilde = jnp.swapaxes(g_tilde, -1, -2)
+                if use_limiter:
+                    g_tilde, out["prev_norm"] = limiter.limit(
+                        g_tilde, lstate["prev_norm"], gamma)
+                delta = g_tilde
+                eff_alpha = alpha
+            step_size = (lr_t * lr_mult * eff_alpha).astype(jnp.float32)
+            new_p = p.astype(jnp.float32) - step_size * delta.astype(jnp.float32)
+            if weight_decay:
+                new_p = new_p - lr_t * weight_decay * p.astype(jnp.float32)
+            new_params.append(new_p.astype(p.dtype))
+            new_states.append(out)
+        return (jax.tree_util.tree_unflatten(treedef, new_params),
+                {"step": step + 1, "leaves": tuple(new_states)})
+
+    return Optimizer(init, update)
+
+
+# ---------------------------------------------------------------------------
+# Memory accounting (paper Table I / Table XI): optimizer-state bytes.
+# ---------------------------------------------------------------------------
+
+def state_memory_bytes(params, level: int,
+                       eligible: Callable[[str, jax.Array], bool] = None,
+                       bytes_per_el: int = 2, host: str = "adam") -> Dict[str, int]:
+    """Optimizer-state memory: GWT leaves keep ``2·size/2^l`` elements
+    (M^R+V^R), plain leaves ``2·size`` (Adam M+V); MUON host keeps 1× not 2×.
+    """
+    elig = eligible or default_eligible
+    per_state = 1 if host == "muon" else 2
+    acc = {"gwt_bytes": 0, "plain_bytes": 0, "gwt_params": 0, "plain_params": 0}
+    paths, leaves, _ = flatten_with_paths(params)
+    for path, p in zip(paths, leaves):
+        mode = _leaf_mode(path, p, level, elig)
+        if mode == _Mode.PLAIN:
+            acc["plain_bytes"] += 2 * p.size * bytes_per_el
+            acc["plain_params"] += p.size
+        else:
+            acc["gwt_bytes"] += per_state * (p.size >> level) * bytes_per_el
+            acc["gwt_params"] += p.size
+    acc["total_bytes"] = acc["gwt_bytes"] + acc["plain_bytes"]
+    return acc

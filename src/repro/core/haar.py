@@ -1,0 +1,201 @@
+"""Multi-level discrete Haar wavelet transform (DHT) — the paper's Eq. (2)/(3).
+
+Two implementations:
+  * ``haar_forward`` / ``haar_inverse`` — fast butterfly (O(m·n) adds, no
+    matmul), the production path.
+  * ``haar_matrix`` — the explicit orthonormal matrix ``H`` of Eq. (3)
+    (and its level-l composition), used as the validation oracle and in
+    property tests (``H Hᵀ = I``).
+
+Layout convention (packed form): applying level ``l`` to the last axis of
+``g`` of width ``n`` yields ``[A_l | D_l | D_{l-1} | ... | D_1]`` where
+``A_l`` has width ``n/2^l`` and band ``D_k`` has width ``n/2^k``.  The packed
+array has the same shape as ``g`` (the DHT is a bijection), matching the
+paper's "no extra information" property.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+INV_SQRT2 = 0.7071067811865476
+
+
+def _check(n: int, level: int) -> None:
+    if level < 0:
+        raise ValueError(f"level must be >= 0, got {level}")
+    if n % (1 << level) != 0:
+        raise ValueError(f"axis length {n} not divisible by 2^{level}")
+
+
+def haar_forward(g: jax.Array, level: int) -> Tuple[jax.Array, List[jax.Array]]:
+    """Level-``level`` DHT along the last axis.
+
+    Returns ``(A_l, [D_l, D_{l-1}, ..., D_1])``.  ``level == 0`` returns
+    ``(g, [])`` (identity — GWT degenerates to the host optimizer).
+    """
+    _check(g.shape[-1], level)
+    a = g
+    details: List[jax.Array] = []
+    for _ in range(level):
+        x = a.reshape(*a.shape[:-1], a.shape[-1] // 2, 2)
+        even, odd = x[..., 0], x[..., 1]
+        a = (even + odd) * INV_SQRT2
+        details.append((even - odd) * INV_SQRT2)
+    details.reverse()  # [D_l, ..., D_1]
+    return a, details
+
+
+def haar_inverse(a: jax.Array, details: Sequence[jax.Array]) -> jax.Array:
+    """Inverse of :func:`haar_forward` (paper Eq. (1))."""
+    x = a
+    for d in details:  # D_l first: coarsest band reconstructs first
+        even = (x + d) * INV_SQRT2
+        odd = (x - d) * INV_SQRT2
+        x = jnp.stack([even, odd], axis=-1).reshape(*x.shape[:-1], x.shape[-1] * 2)
+    return x
+
+
+def pack(a: jax.Array, details: Sequence[jax.Array]) -> jax.Array:
+    """``(A_l, [D_l..D_1]) -> [A_l | D_l | ... | D_1]`` (same total width)."""
+    return jnp.concatenate([a, *details], axis=-1)
+
+
+def unpack(packed: jax.Array, level: int) -> Tuple[jax.Array, List[jax.Array]]:
+    n = packed.shape[-1]
+    _check(n, level)
+    widths = [n >> level] + [n >> k for k in range(level, 0, -1)]
+    offs = np.cumsum([0] + widths)
+    parts = [packed[..., offs[i]:offs[i + 1]] for i in range(len(widths))]
+    return parts[0], parts[1:]
+
+
+def haar_forward_packed(g: jax.Array, level: int) -> jax.Array:
+    return pack(*haar_forward(g, level))
+
+
+def haar_inverse_packed(packed: jax.Array, level: int) -> jax.Array:
+    return haar_inverse(*unpack(packed, level))
+
+
+@functools.lru_cache(maxsize=64)
+def _haar_matrix_np(n: int, level: int) -> np.ndarray:
+    """Level-``level`` orthonormal DHT matrix ``H`` with ``G @ H = packed``.
+
+    Level-1 is exactly the paper's Eq. (3); higher levels compose a level-1
+    transform on the approximation half.
+    """
+    _check(n, level)
+    h = np.eye(n)
+    width = n
+    for _ in range(level):
+        h1 = np.zeros((width, width))
+        half = width // 2
+        for i in range(half):
+            h1[2 * i, i] = INV_SQRT2        # approx
+            h1[2 * i + 1, i] = INV_SQRT2
+            h1[2 * i, half + i] = INV_SQRT2  # detail
+            h1[2 * i + 1, half + i] = -INV_SQRT2
+        step = np.eye(n)
+        step[:width, :width] = h1
+        # after one level the detail bands already emitted sit to the right
+        # and must not be touched again; shift: new packed layout is
+        # [A | D_new | D_old...], and h1 maps [A_prev] -> [A | D_new].
+        h = h @ step
+        width //= 2
+    return h
+
+
+def haar_matrix(n: int, level: int, dtype=jnp.float32) -> jax.Array:
+    return jnp.asarray(_haar_matrix_np(n, level), dtype=dtype)
+
+
+# ---------------------------------------------------------------------------
+# Haar low-pass operator P_l of §III-C (Theorem 1): block-mean per 2^l cols.
+# ---------------------------------------------------------------------------
+
+def lowpass(g: jax.Array, level: int) -> jax.Array:
+    """``P_l(G)``: replace each block of ``2^l`` columns by the block mean."""
+    n = g.shape[-1]
+    _check(n, level)
+    b = 1 << level
+    blocks = g.reshape(*g.shape[:-1], n // b, b)
+    mean = blocks.mean(axis=-1, keepdims=True)
+    return jnp.broadcast_to(mean, blocks.shape).reshape(g.shape)
+
+
+# ---------------------------------------------------------------------------
+# Daubechies-4 (db2) — beyond-paper wavelet option.  The paper uses Haar
+# "as the default filter"; db2's longer support captures smoother gradient
+# structure.  Periodic (circular) boundary keeps the transform orthonormal
+# on ℝ^n (n divisible by 2^l), so Parseval/reconstruction invariants carry
+# over and the GWT memory accounting is unchanged.
+# ---------------------------------------------------------------------------
+
+_SQRT3 = 1.7320508075688772
+_DB2_LO = tuple(c / (4 * np.sqrt(2)) for c in
+                (1 + _SQRT3, 3 + _SQRT3, 3 - _SQRT3, 1 - _SQRT3))
+_DB2_HI = (_DB2_LO[3], -_DB2_LO[2], _DB2_LO[1], -_DB2_LO[0])
+
+
+def _db2_level_fwd(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """One db2 analysis level along the last axis (periodic)."""
+    n = x.shape[-1]
+    xr = jnp.concatenate([x, x[..., :3]], axis=-1)  # circular pad (4 taps)
+    windows = jnp.stack([xr[..., i:n + i] for i in range(4)], axis=-1)
+    even = windows[..., ::2, :]                     # (..., n/2, 4)
+    lo = sum(_DB2_LO[i] * even[..., i] for i in range(4))
+    hi = sum(_DB2_HI[i] * even[..., i] for i in range(4))
+    return lo, hi
+
+
+def _db2_level_inv(lo: jax.Array, hi: jax.Array) -> jax.Array:
+    """Inverse via the transposed (orthonormal) synthesis operator."""
+    n2 = lo.shape[-1]
+    n = 2 * n2
+    out = jnp.zeros(lo.shape[:-1] + (n + 2,), jnp.result_type(lo, hi))
+    for i in range(4):
+        contrib = lo * _DB2_LO[i] + hi * _DB2_HI[i]
+        out = out.at[..., i:i + n:2].add(contrib)
+    # fold the circular tail back
+    folded = out[..., :n].at[..., :2].add(out[..., n:n + 2])
+    return folded
+
+
+def db2_forward(g: jax.Array, level: int):
+    _check(g.shape[-1], level)
+    a = g.astype(jnp.float32)
+    details: List[jax.Array] = []
+    for _ in range(level):
+        a, d = _db2_level_fwd(a)
+        details.append(d)
+    details.reverse()
+    return a, details
+
+
+def db2_inverse(a: jax.Array, details: Sequence[jax.Array]) -> jax.Array:
+    x = a
+    for d in details:
+        x = _db2_level_inv(x, d)
+    return x
+
+
+def detail_scale_upsample(scale_a: jax.Array, level: int, band_level: int) -> jax.Array:
+    """Upsample a per-``A_l``-coefficient scale to band ``D_k`` resolution.
+
+    ``A_l`` coefficient ``j`` covers original columns ``[j·2^l, (j+1)·2^l)``;
+    ``D_k`` coefficient ``i`` covers ``[i·2^k, (i+1)·2^k)``.  The unique
+    block-consistent extension of the paper's 1-level rule repeats each
+    ``A``-scale ``2^{l-k}`` times.
+    """
+    if scale_a.ndim and scale_a.shape[-1] == 1:
+        return scale_a  # already broadcastable (e.g. Adam-mini per-row scale)
+    reps = 1 << (level - band_level)
+    if reps == 1:
+        return scale_a
+    return jnp.repeat(scale_a, reps, axis=-1)

@@ -1,0 +1,30 @@
+"""Fira's Norm-growth Limiter (NL), adopted by the paper (§III-B, Fig. 3).
+
+    if ||G̃_t||_F / ||G̃_{t-1}||_F > γ:   G̃_t ← G̃_t / ||G̃_t||_F · γ · ||G̃_{t-1}||_F
+
+Stateless helper: caller threads ``prev_norm`` (one f32 scalar per tensor).
+``prev_norm == 0`` (first step) disables limiting for that step.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+DEFAULT_GAMMA = 1.01
+
+
+def limit(update: jax.Array, prev_norm: jax.Array, gamma: float = DEFAULT_GAMMA
+          ) -> Tuple[jax.Array, jax.Array]:
+    """Returns ``(limited_update, new_prev_norm)``."""
+    norm = jnp.linalg.norm(update.astype(jnp.float32))
+    safe_prev = jnp.where(prev_norm > 0, prev_norm, norm)
+    scale = jnp.where(
+        norm > gamma * safe_prev,
+        gamma * safe_prev / jnp.maximum(norm, 1e-30),
+        1.0,
+    )
+    limited = update * scale.astype(update.dtype)
+    return limited, (norm * scale).astype(jnp.float32)

@@ -1,0 +1,76 @@
+"""Wavelet-domain gradient compression for data-parallel reduction
+(beyond-paper extension; DESIGN.md §3).
+
+The paper compresses *optimizer states* in the Haar domain.  The same
+frequency split compresses *DP gradient traffic*: all-reduce the
+approximation band ``A_l`` at full precision and the detail bands ``D_k``
+at reduced precision (bf16 / f8).  Because the DHT is linear and
+orthonormal, ``mean(G_i) = IDWT(mean(DWT(G_i)))`` exactly; the only error
+is detail-band quantization — which the paper's own analysis (Theorem 1:
+detail bands carry the part a low-rank/low-pass approximation would drop)
+argues is the tolerant part of the spectrum.
+
+Wire savings at level l with bf16 details and f32 approximation vs f32
+all-reduce: ``(1/2^l) · 4B + (1 − 1/2^l) · 2B`` vs ``4B`` → 2× at l≥2
+(and ~3.7× with f8 details).
+
+Implemented with ``shard_map`` + ``lax.psum`` over the DP axis so it
+composes under jit with the rest of the (auto-sharded) step.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core import haar
+
+
+def compressed_psum_mean(g: jax.Array, axis_name: str, level: int = 2,
+                         detail_dtype=jnp.bfloat16) -> jax.Array:
+    """Mean-reduce ``g`` over ``axis_name`` inside shard_map/pmap context,
+    wavelet-split: A_l in f32, D_k in ``detail_dtype``."""
+    n = jax.lax.psum(1, axis_name)
+    if g.ndim < 2 or g.shape[-1] % (1 << level):
+        return jax.lax.psum(g.astype(jnp.float32), axis_name) / n
+    a, ds = haar.haar_forward(g.astype(jnp.float32), level)
+    a = jax.lax.psum(a, axis_name) / n
+    ds = [jax.lax.psum(d.astype(detail_dtype), axis_name).astype(jnp.float32) / n
+          for d in ds]
+    return haar.haar_inverse(a, ds)
+
+
+def make_compressed_grad_reducer(mesh, axis: str = "data", level: int = 2,
+                                 detail_dtype=jnp.bfloat16):
+    """Tree-wise reducer: local per-shard grads -> mean over the DP axis.
+
+    Expects grad leaves replicated over every mesh axis except ``axis``
+    (pure-DP layout).  Returns a jit-compatible callable.
+    """
+    from jax.experimental.shard_map import shard_map
+
+    def reduce_tree(grads):
+        def one(g):
+            fn = shard_map(
+                functools.partial(compressed_psum_mean, axis_name=axis,
+                                  level=level, detail_dtype=detail_dtype),
+                mesh=mesh,
+                in_specs=P(axis, *([None] * (g.ndim - 1))),
+                out_specs=P(axis, *([None] * (g.ndim - 1))),
+            )
+            return fn(g)
+        return jax.tree.map(one, grads)
+
+    return reduce_tree
+
+
+def wire_bytes(num_elements: int, level: int, detail_bytes: int = 2,
+               approx_bytes: int = 4) -> int:
+    """Bytes on the wire per worker per reduction (ring, ≈2× payload)."""
+    approx = num_elements >> level
+    detail = num_elements - approx
+    return 2 * (approx * approx_bytes + detail * detail_bytes)

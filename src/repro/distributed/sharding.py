@@ -1,0 +1,167 @@
+"""Logical-axis → mesh-axis sharding rules (DP/FSDP/TP/EP/SP).
+
+One rule table covers all 10 architectures because parameters carry logical
+axis names (repro.models.layers.Builder).  Rule values are *preference
+lists*: the first candidate whose mesh axes are (a) not yet used by another
+dim of the same tensor and (b) divide the dim size is taken; otherwise the
+dim is replicated.  This resolves, automatically:
+
+* GQA kv_heads (8) on a 16-way model axis  → replicated KV, sharded Q;
+* qwen2-moe's 60 experts on 16-way model   → EP falls back to TP-in-expert
+  (``expert_mlp`` takes the model axis instead);
+* seamless' 256206 vocab (∤16)             → replicated vocab dim;
+* long_500k's batch=1                      → batch replicated, cache
+  sequence sharded over model×data (SP decode).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models.layers import Axes
+
+Candidate = Union[str, Tuple[str, ...]]
+Rules = Dict[str, Tuple[Candidate, ...]]
+
+
+def _dp_axes(mesh) -> Tuple[str, ...]:
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def train_rules(mesh) -> Rules:
+    """FSDP(data) × TP/EP(model); DP batch over (pod×)data.  Parameters are
+    *not* sharded over the pod axis (cross-DCI all-gathers per layer would
+    dominate) — the pod axis carries pure DP + gradient reduction."""
+    dp = _dp_axes(mesh)
+    return {
+        "vocab": ("model",),
+        "embed": ("data",),
+        "heads": ("model",),
+        "kv_heads": ("model",),
+        "mlp": ("model",),
+        "expert": ("model",),       # EP when E % 16 == 0, else falls through
+        "expert_mlp": ("model",),   # ...to TP inside the expert
+        "inner": ("model",),
+        "layers": (),
+        "batch": (dp,),
+        "seq": (),
+    }
+
+
+def decode_rules(mesh) -> Rules:
+    """Decode: cache sequence axis gets the model axis (SP); for batch=1
+    cells the sequence takes model×data."""
+    dp = _dp_axes(mesh)
+    return {
+        "vocab": ("model",),
+        "embed": ("data",),
+        "heads": ("model",),
+        "kv_heads": (),             # cache seq owns the model axis
+        "mlp": ("model",),
+        "expert": ("model",),
+        "expert_mlp": ("model",),
+        "inner": ("model",),
+        "layers": (),
+        "batch": (dp,),
+        "seq": (("model",) + dp, ("model",) + dp[:1], "model"),
+    }
+
+
+def _axis_size(mesh, cand: Candidate) -> int:
+    names = (cand,) if isinstance(cand, str) else cand
+    return math.prod(mesh.shape[a] for a in names)
+
+
+def spec_for(shape: Sequence[int], axes: Axes, mesh, rules: Rules) -> P:
+    used = set()
+    entries = []
+    for size, name in zip(shape, axes.names):
+        picked = None
+        if name is not None:
+            for cand in rules.get(name, ()):
+                cand_names = (cand,) if isinstance(cand, str) else tuple(cand)
+                if not cand_names:
+                    continue
+                if any(a in used for a in cand_names):
+                    continue
+                if size % _axis_size(mesh, cand) != 0:
+                    continue
+                picked = cand_names if len(cand_names) > 1 else cand_names[0]
+                used.update(cand_names)
+                break
+        entries.append(picked)
+    while entries and entries[-1] is None:
+        entries.pop()
+    return P(*entries)
+
+
+def tree_shardings(abstract: Any, axes_tree: Any, mesh, rules: Rules):
+    """Map (ShapeDtypeStruct tree, Axes tree) -> NamedSharding tree."""
+    def one(sds, ax):
+        if ax is None:
+            return NamedSharding(mesh, P())
+        return NamedSharding(mesh, spec_for(sds.shape, ax, mesh, rules))
+    return jax.tree.map(one, abstract, axes_tree,
+                        is_leaf=lambda x: x is None or isinstance(x, Axes))
+
+
+# ---------------------------------------------------------------------------
+# Optimizer-state shardings (mirrors repro.core.gwt leaf routing)
+# ---------------------------------------------------------------------------
+
+def gwt_state_shardings(params_abstract, params_axes, mesh, rules: Rules,
+                        level: int, eligible=None, host: str = "adam"):
+    from repro.core.gwt import _Mode, _leaf_mode
+    from repro.optim.base import default_eligible, flatten_with_paths
+
+    elig = eligible or default_eligible
+    paths, pleaves, _ = flatten_with_paths(params_abstract)
+    aleaves = jax.tree.leaves(params_axes,
+                              is_leaf=lambda x: isinstance(x, Axes))
+    rep = NamedSharding(mesh, P())
+    leaf_shardings = []
+    for path, sds, ax in zip(paths, pleaves, aleaves):
+        mode = _leaf_mode(path, sds, level, elig)
+        if mode == _Mode.PLAIN:
+            sh = NamedSharding(mesh, spec_for(sds.shape, ax, mesh, rules))
+            host_sh = {"m": sh, "v": sh}
+            if host == "adam_mini":
+                host_sh["v"] = rep
+            if host == "muon":
+                host_sh = {"m": sh}
+            leaf_shardings.append({"host": host_sh})
+        else:
+            if mode == _Mode.FIRST:
+                names = ax.names[:-2] + (ax.names[-1], ax.names[-2])
+                shape = sds.shape[:-2] + (sds.shape[-1], sds.shape[-2])
+            else:
+                names, shape = ax.names, sds.shape
+            a_shape = shape[:-1] + (shape[-1] >> level,)
+            sh = NamedSharding(mesh, spec_for(a_shape, Axes(names), mesh, rules))
+            host_sh = {"m": sh, "v": sh}
+            if host == "adam_mini":
+                host_sh["v"] = rep
+            if host == "muon":
+                host_sh = {"m": sh}
+            leaf_shardings.append({"host": host_sh, "prev_norm": rep})
+    return {"step": rep, "leaves": tuple(leaf_shardings)}
+
+
+def batch_shardings(batch_abstract: Dict[str, Any], mesh):
+    """Input shardings: batch dims over DP axes, everything else replicated."""
+    dp = _dp_axes(mesh)
+    dp_size = math.prod(mesh.shape[a] for a in dp)
+    out = {}
+    for k, v in batch_abstract.items():
+        bdim = 1 if k == "mrope_positions" else 0
+        spec = [None] * len(v.shape)
+        if v.shape[bdim] % dp_size == 0:
+            spec[bdim] = dp if len(dp) > 1 else dp[0]
+        elif v.shape[bdim] % mesh.shape["data"] == 0:
+            spec[bdim] = "data"
+        out[k] = NamedSharding(mesh, P(*spec))
+    return out

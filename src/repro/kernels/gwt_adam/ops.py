@@ -1,0 +1,57 @@
+"""jit'd wrapper for the fused GWT-Adam kernel, with backend dispatch and
+leading-batch handling (stacked ``(L, m, n)`` scan parameters are vmapped).
+
+``fused_update`` is the entry point used by ``repro.core.gwt`` when
+``impl='pallas'``.  Semantics match ``repro.core.gwt._gwt_core`` exactly
+(tested leaf-by-leaf); the norm-growth limiter stays in the caller.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.gwt_adam import kernel, ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _tile_fn(impl: str, level: int, b1: float, b2: float, eps: float):
+    if impl == "auto":
+        impl = "pallas" if _on_tpu() else "jnp"
+    if impl == "pallas":
+        return functools.partial(kernel.gwt_adam_tile, level=level, b1=b1,
+                                 b2=b2, eps=eps)
+    if impl == "interpret":
+        return functools.partial(kernel.gwt_adam_tile, level=level, b1=b1,
+                                 b2=b2, eps=eps, interpret=True)
+    return functools.partial(ref.gwt_adam_tile, level=level, b1=b1, b2=b2,
+                             eps=eps)
+
+
+@functools.partial(jax.jit, static_argnames=("level", "b1", "b2", "eps", "impl"))
+def fused_update(g: jax.Array, state: dict, step: jax.Array, *,
+                 level: int, b1: float = 0.9, b2: float = 0.999,
+                 eps: float = 1e-6, impl: str = "auto"
+                 ) -> Tuple[jax.Array, jax.Array, dict]:
+    """Returns ``(g_tilde, lr_mult, new_state)`` — drop-in for the jnp core."""
+    fn = _tile_fn(impl, level, b1, b2, eps)
+    if g.ndim > 2:  # stacked scan leaves (L, m, n)
+        lead = g.shape[:-2]
+        g2 = g.reshape((-1,) + g.shape[-2:])
+        m2 = state["m"].reshape((-1,) + state["m"].shape[-2:])
+        v2 = state["v"].reshape((-1,) + state["v"].shape[-2:])
+        gt, m, v, _ = jax.vmap(fn)(g2, m2, v2)
+        gt = gt.reshape(lead + gt.shape[-2:])
+        m = m.reshape(lead + m.shape[-2:])
+        v = v.reshape(lead + v.shape[-2:])
+    else:
+        gt, m, v, _ = fn(g, state["m"], state["v"])
+    t = step.astype(jnp.float32) + 1.0
+    lr_mult = jnp.sqrt(1 - b2 ** t) / (1 - b1 ** t)
+    return gt, lr_mult, {"m": m, "v": v}

@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for the fused GWT-Adam kernel (Algorithm 1 inner loop)."""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import haar
+
+
+def gwt_adam_tile(g: jax.Array, m_st: jax.Array, v_st: jax.Array, *,
+                  level: int, b1: float = 0.9, b2: float = 0.999,
+                  eps: float = 1e-6) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    g32 = g.astype(jnp.float32)
+    a, details = haar.haar_forward(g32, level)
+    m = b1 * m_st.astype(jnp.float32) + (1 - b1) * a
+    v = b2 * v_st.astype(jnp.float32) + (1 - b2) * a * a
+    inv_denom = 1.0 / (jnp.sqrt(v) + eps)
+    a_t = m * inv_denom
+    tilde_d = [d * haar.detail_scale_upsample(inv_denom, level, level - i)
+               for i, d in enumerate(details)]
+    gt = haar.haar_inverse(a_t, tilde_d)
+    ssq = jnp.sum(gt * gt)[None, None]
+    return (gt.astype(g.dtype), m.astype(m_st.dtype), v.astype(v_st.dtype), ssq)

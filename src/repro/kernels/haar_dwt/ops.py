@@ -1,0 +1,41 @@
+"""jit'd public wrapper for the haar_dwt kernel with backend dispatch.
+
+On TPU the Pallas kernel runs natively; elsewhere (CPU container) we use
+``interpret=True`` for validation or fall back to the jnp oracle.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Sequence, Tuple
+
+import jax
+
+from repro.kernels.haar_dwt import kernel, ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("level", "impl"))
+def dwt(g: jax.Array, level: int, impl: str = "auto") -> Tuple[jax.Array, ...]:
+    """Forward multi-level DWT. ``impl``: auto|pallas|interpret|jnp."""
+    if impl == "auto":
+        impl = "pallas" if _on_tpu() else "jnp"
+    if impl == "pallas":
+        return kernel.haar_dwt_fwd(g, level)
+    if impl == "interpret":
+        return kernel.haar_dwt_fwd(g, level, interpret=True)
+    return ref.haar_dwt_fwd(g, level)
+
+
+@functools.partial(jax.jit, static_argnames=("impl",))
+def idwt(a: jax.Array, details: Sequence[jax.Array], impl: str = "auto") -> jax.Array:
+    if impl == "auto":
+        impl = "pallas" if _on_tpu() else "jnp"
+    if impl == "pallas":
+        return kernel.haar_dwt_inv(a, details)
+    if impl == "interpret":
+        return kernel.haar_dwt_inv(a, details, interpret=True)
+    return ref.haar_dwt_inv(a, details)

@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for the haar_dwt kernel (delegates to repro.core.haar)."""
+
+from __future__ import annotations
+
+from typing import Sequence, Tuple
+
+import jax
+
+from repro.core import haar
+
+
+def haar_dwt_fwd(g: jax.Array, level: int) -> Tuple[jax.Array, ...]:
+    a, details = haar.haar_forward(g, level)
+    return (a.astype(g.dtype), *(d.astype(g.dtype) for d in details))
+
+
+def haar_dwt_inv(a: jax.Array, details: Sequence[jax.Array]) -> jax.Array:
+    return haar.haar_inverse(a, list(details)).astype(a.dtype)

@@ -1,0 +1,32 @@
+"""Production TPU launch environment (compute/comm overlap).
+
+The dry-run container has no TPU, so these cannot be measured here — they
+are the shipped defaults for real-pod launches (standard latency-hiding
+scheduler + async collective settings used by MaxText-class frameworks).
+``apply()`` merges them into ``LIBTPU_INIT_ARGS``/``XLA_FLAGS`` without
+clobbering user-set values.
+"""
+
+from __future__ import annotations
+
+import os
+
+TPU_XLA_FLAGS = [
+    # overlap collectives with compute (latency-hiding scheduler)
+    "--xla_tpu_enable_async_collective_fusion=true",
+    "--xla_tpu_enable_async_collective_fusion_fuse_all_gather=true",
+    "--xla_tpu_enable_async_collective_fusion_multiple_steps=true",
+    "--xla_tpu_overlap_compute_collective_tc=true",
+    "--xla_enable_async_all_gather=true",
+    "--xla_enable_async_collective_permute=true",
+    # memory scheduler headroom for the overlapped buffers
+    "--xla_tpu_scheduler_percent_shared_memory_limit=100",
+]
+
+
+def apply(env: dict = None) -> dict:
+    env = env if env is not None else os.environ
+    existing = env.get("XLA_FLAGS", "")
+    merged = [f for f in TPU_XLA_FLAGS if f.split("=")[0] not in existing]
+    env["XLA_FLAGS"] = (existing + " " + " ".join(merged)).strip()
+    return env

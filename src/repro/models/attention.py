@@ -1,0 +1,339 @@
+"""Attention substrate: GQA/MQA/MHA with sliding-window, logit softcap,
+QKV-bias, QK-norm, KV caches (full + ring-buffer window), and three compute
+paths chosen by static shape:
+
+* direct einsum (short sequences),
+* flash-style double-chunked online-softmax scan (long prefill — bounds the
+  score tile to ``q_chunk × kv_chunk`` instead of ``S²``),
+* block-local attention for sliding windows (reshape into window blocks;
+  each block attends itself + its predecessor — exact, O(S·2w)).
+
+Sharding note: all einsums keep the query-head axis ``H`` as a single dim
+and explicitly repeat K/V to ``H`` heads (Megatron-style).  Keeping
+``(KV, G)`` split would require a 2-axis tile assignment that GSPMD often
+resolves by *replicating* heads — measured 16× attention-FLOP inflation on
+the 256-chip dry-run (EXPERIMENTS.md §Perf).  The repeat is free per device
+(local ``H`` shard sees exactly its own KV slice or a broadcast).
+
+Decode attends a pre-filled cache; with the cache sequence axis sharded
+(`model` and/or `data`), the softmax reductions become GSPMD collectives —
+the flash-decoding partial-softmax combine falls out of XLA automatically.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import rope as rope_lib
+from repro.models.layers import Builder, rms_norm, softcap
+
+NEG_INF = -1e30
+
+
+def attn_init(b: Builder, cfg) -> dict:
+    d, hd, H, KV = cfg.d_model, cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+    p = {
+        "wq": b.param((d, H * hd), ("embed", "heads")),
+        "wk": b.param((d, KV * hd), ("embed", "kv_heads")),
+        "wv": b.param((d, KV * hd), ("embed", "kv_heads")),
+        "wo": b.param((H * hd, d), ("heads", "embed")),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = b.param((H * hd,), ("heads",), init="zeros")
+        p["bk"] = b.param((KV * hd,), ("kv_heads",), init="zeros")
+        p["bv"] = b.param((KV * hd,), ("kv_heads",), init="zeros")
+    if cfg.qk_norm:
+        p["q_norm"] = b.param((hd,), (None,), init="zeros")
+        p["k_norm"] = b.param((hd,), (None,), init="zeros")
+    return p
+
+
+def _project(p, cfg, x):
+    B, S, _ = x.shape
+    hd, H, KV = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(B, S, H, hd)
+    k = k.reshape(B, S, KV, hd)
+    v = v.reshape(B, S, KV, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    return q, k, v
+
+
+def _repeat_kv(k: jax.Array, H: int) -> jax.Array:
+    """(B,T,KV,hd) -> (B,T,H,hd): replicate each KV head over its group."""
+    KV = k.shape[2]
+    if KV == H:
+        return k
+    return jnp.repeat(k, H // KV, axis=2)
+
+
+def _direct_attn(q, k, v, *, causal_offset: int, window: int, cap: float,
+                 kv_valid: Optional[jax.Array] = None):
+    """Direct path. q (B,Sq,H,hd); k/v (B,T,H,hd) (already KV-repeated).
+
+    Query position i (global ``i + causal_offset``) may attend key position
+    t iff ``t <= i + causal_offset`` and (window) ``t > i + offset - window``.
+    ``kv_valid`` (B,T) optionally masks cache slots (decode).
+    """
+    B, Sq, H, hd = q.shape
+    T = k.shape[1]
+    s = jnp.einsum("bshd,bthd->bhst", q, k,
+                   preferred_element_type=jnp.float32) / np.sqrt(hd)
+    if cap:
+        s = cap * jnp.tanh(s / cap)
+    qpos = jnp.arange(Sq)[:, None] + causal_offset
+    tpos = jnp.arange(T)[None, :]
+    mask = tpos <= qpos                                  # (Sq, T)
+    if window:
+        mask &= tpos > qpos - window
+    if kv_valid is not None:
+        mask = mask[None, None] & kv_valid[:, None, None, :]
+    else:
+        mask = mask[None, None]
+    s = jnp.where(mask, s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhst,bthd->bshd", w.astype(v.dtype), v)
+    return o
+
+
+def _decode_attn_grouped(q, k, v, kv_valid, cap: float,
+                         chunk: int = 8192):
+    """Single-token decode against a (possibly seq-sharded) cache.
+    q (B,1,H,hd); k/v (B,T,KV,hd); kv_valid (B,T).
+
+    Long caches are processed with an online-softmax scan over cache chunks
+    (flash-decoding): the f32 score buffer is (B,KV,G,1,chunk), not
+    (...,T) — unchunked, decode_32k on 80-95-layer archs peaked >20 GiB/dev.
+    """
+    B, S, Hq, hd = q.shape
+    T, KV = k.shape[1], k.shape[2]
+    G = Hq // KV
+
+    def attend(qg, kb, vb, validb):
+        s = jnp.einsum("bskgd,btkd->bkgst", qg, kb,
+                       preferred_element_type=jnp.float32) / np.sqrt(hd)
+        if cap:
+            s = cap * jnp.tanh(s / cap)
+        s = jnp.where(validb[:, None, None, None, :], s, NEG_INF)
+        w = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bkgst,btkd->bskgd", w.astype(vb.dtype), vb)
+        return o
+
+    # Chunk over the BATCH dim (aligned with the data sharding — a T-dim
+    # chunking would fight the model-sharded cache sequence axis): bounds
+    # the per-layer f32 score buffer to (chunk_B, KV, G, 1, T_loc).
+    chunk_b = 16
+    if B > chunk_b and B % chunk_b == 0 and T * B >= 1 << 22:
+        nb = B // chunk_b
+        # interleaved layout (row m*nb + c -> chunk c): each chunk holds one
+        # row per data shard, so the scan never reshards (cf. microbatch_split)
+        def split(x):
+            return x.reshape(chunk_b, nb, *x.shape[1:]).swapaxes(0, 1)
+        qs, ks, vs = split(q), split(k), split(v)
+        valids = split(kv_valid)
+
+        def b_step(_, blk):
+            qb, kb, vb, vldb = blk
+            qg = qb.reshape(chunk_b, S, KV, G, hd)
+            return None, attend(qg, kb, vb, vldb)
+
+        _, outs = jax.lax.scan(b_step, None, (qs, ks, vs, valids))
+        # invert the interleave: (nb, chunk_b, ...) -> (B, ...)
+        o = outs.swapaxes(0, 1).reshape(B, S, KV, G, hd)
+        return o.reshape(B, S, Hq, hd)
+
+    o = attend(q.reshape(B, S, KV, G, hd), k, v, kv_valid)
+    return o.reshape(B, S, Hq, hd)
+
+
+def _flash_attn(q, k, v, *, q_chunk: int = 512, kv_chunk: int = 2048,
+                cap: float = 0.0):
+    """Causal flash-style attention: outer scan over q chunks, inner online
+    softmax over kv chunks.  Exact; score tile bounded to (q_chunk, kv_chunk).
+    q (B,S,H,hd); k/v (B,S,H,hd) (KV-repeated)."""
+    B, S, H, hd = q.shape
+    scale = 1.0 / np.sqrt(hd)
+    nq, nk = S // q_chunk, S // kv_chunk
+    qs = q.reshape(B, nq, q_chunk, H, hd).transpose(1, 0, 2, 3, 4)
+    ks = k.reshape(B, nk, kv_chunk, H, hd).transpose(1, 0, 2, 3, 4)
+    vs = v.reshape(B, nk, kv_chunk, H, hd).transpose(1, 0, 2, 3, 4)
+
+    def q_step(_, qi_blk):
+        qi, qblk = qi_blk
+
+        def kv_step(carry, kj_blk):
+            m, l, acc = carry
+            kj, kblk, vblk = kj_blk
+            s = jnp.einsum("bshd,bthd->bhst", qblk, kblk,
+                           preferred_element_type=jnp.float32) * scale
+            if cap:
+                s = cap * jnp.tanh(s / cap)
+            qpos = qi * q_chunk + jnp.arange(q_chunk)[:, None]
+            tpos = kj * kv_chunk + jnp.arange(kv_chunk)[None, :]
+            s = jnp.where(tpos <= qpos, s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(-1))
+            pmat = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + pmat.sum(-1)
+            pv = jnp.einsum("bhst,bthd->bhsd", pmat.astype(vblk.dtype), vblk)
+            acc_new = acc * corr[..., None] + pv.astype(jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, H, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, H, q_chunk), jnp.float32)
+        a0 = jnp.zeros((B, H, q_chunk, hd), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0), (jnp.arange(nk), ks, vs))
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        return None, out  # (B,H,q_chunk,hd)
+
+    _, outs = jax.lax.scan(q_step, None, (jnp.arange(nq), qs))
+    # (nq,B,H,q_chunk,hd) -> (B,S,H,hd)
+    out = outs.transpose(1, 0, 3, 2, 4).reshape(B, S, H, hd)
+    return out.astype(q.dtype)
+
+
+def _flash_attn_noncausal(q, k, v, *, q_chunk: int = 512,
+                          kv_chunk: int = 2048, cap: float = 0.0):
+    """Non-causal chunked online-softmax attention (encoder self-attn and
+    decoder cross-attn at long lengths — direct scores at 32k×8k are tens
+    of GiB).  q (B,Sq,H,hd); k/v (B,Skv,H,hd)."""
+    B, Sq, H, hd = q.shape
+    Skv = k.shape[1]
+    q_chunk = min(q_chunk, Sq)
+    kv_chunk = min(kv_chunk, Skv)
+    if Sq % q_chunk or Skv % kv_chunk:
+        return _direct_attn(q, k, v, causal_offset=int(1e9), window=0,
+                            cap=cap)
+    scale = 1.0 / np.sqrt(hd)
+    nq, nk = Sq // q_chunk, Skv // kv_chunk
+    qs = q.reshape(B, nq, q_chunk, H, hd).transpose(1, 0, 2, 3, 4)
+    ks = k.reshape(B, nk, kv_chunk, H, hd).transpose(1, 0, 2, 3, 4)
+    vs = v.reshape(B, nk, kv_chunk, H, hd).transpose(1, 0, 2, 3, 4)
+
+    def q_step(_, qblk):
+        def kv_step(carry, kv_blk):
+            m, l, acc = carry
+            kblk, vblk = kv_blk
+            s = jnp.einsum("bshd,bthd->bhst", qblk, kblk,
+                           preferred_element_type=jnp.float32) * scale
+            if cap:
+                s = cap * jnp.tanh(s / cap)
+            m_new = jnp.maximum(m, s.max(-1))
+            pmat = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + pmat.sum(-1)
+            pv = jnp.einsum("bhst,bthd->bhsd", pmat.astype(vblk.dtype), vblk)
+            acc_new = acc * corr[..., None] + pv.astype(jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, H, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, H, q_chunk), jnp.float32)
+        a0 = jnp.zeros((B, H, q_chunk, hd), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), (ks, vs))
+        return None, acc / jnp.maximum(l[..., None], 1e-30)
+
+    _, outs = jax.lax.scan(q_step, None, qs)
+    out = outs.transpose(1, 0, 3, 2, 4).reshape(B, Sq, H, hd)
+    return out.astype(q.dtype)
+
+
+def _local_block_attn(q, k, v, *, window: int, cap: float):
+    """Exact sliding-window attention: block i attends blocks {i-1, i}.
+    q/k/v (B,S,H,hd) (KV-repeated)."""
+    B, S, H, hd = q.shape
+    assert S % window == 0, (S, window)
+    nb = S // window
+    scale = 1.0 / np.sqrt(hd)
+    qb = q.reshape(B, nb, window, H, hd)
+    kb = k.reshape(B, nb, window, H, hd)
+    vb = v.reshape(B, nb, window, H, hd)
+    kprev = jnp.concatenate([jnp.zeros_like(kb[:, :1]), kb[:, :-1]], axis=1)
+    vprev = jnp.concatenate([jnp.zeros_like(vb[:, :1]), vb[:, :-1]], axis=1)
+    k2 = jnp.concatenate([kprev, kb], axis=2)            # (B,nb,2w,H,hd)
+    v2 = jnp.concatenate([vprev, vb], axis=2)
+    s = jnp.einsum("bnshd,bnthd->bnhst", qb, k2,
+                   preferred_element_type=jnp.float32) * scale
+    if cap:
+        s = cap * jnp.tanh(s / cap)
+    qpos = jnp.arange(window)[:, None] + window          # within 2w frame
+    tpos = jnp.arange(2 * window)[None, :]
+    mask = (tpos <= qpos) & (tpos > qpos - window)
+    first = (jnp.arange(nb) == 0)[:, None, None]         # block 0 has no prev
+    mask = mask[None] & ~(first & (tpos[None] < window))  # (nb, w, 2w)
+    s = jnp.where(mask[None, :, None, :, :], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bnhst,bnthd->bnshd", w.astype(v2.dtype), v2)
+    return o.reshape(B, S, H, hd)
+
+
+def attn_apply(p, cfg, x, cos, sin, *, local: bool = False,
+               mode: str = "train", cache: Optional[dict] = None,
+               pos: Optional[jax.Array] = None,
+               bidirectional: bool = False) -> Tuple[jax.Array, Optional[dict]]:
+    """Returns (output, new_cache).  ``pos``: scalar cache fill level
+    (decode).  ``mode``: train | prefill | decode."""
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    window = cfg.window if local else 0
+    cap = cfg.attn_softcap
+    q, k, v = _project(p, cfg, x)
+    q = rope_lib.apply_rope(q, cos, sin)
+    k = rope_lib.apply_rope(k, cos, sin)
+
+    new_cache = None
+    if mode == "decode":
+        assert cache is not None and S == 1
+        size = cache["k"].shape[1]
+        slot = pos % size if (local and window) else pos
+        ck = jax.lax.dynamic_update_slice(cache["k"], k, (0, slot, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cache["v"], v, (0, slot, 0, 0))
+        new_cache = {"k": ck, "v": cv}
+        valid = jnp.arange(size)[None, :] <= jnp.minimum(pos, size - 1)
+        valid = jnp.broadcast_to(valid, (B, size))
+        # Grouped einsum, NO KV repeat: materializing the H-head repeat of a
+        # sequence-sharded cache costs G× cache memory per layer (measured
+        # 25 GiB/dev on deepseek decode_32k).  With the cache seq axis model-
+        # sharded and KV replicated, the (KV, G)-split einsum shards cleanly.
+        o = _decode_attn_grouped(q, ck, cv, valid, cap)
+    elif bidirectional:
+        if S > 4096:
+            o = _flash_attn_noncausal(q, _repeat_kv(k, H), _repeat_kv(v, H),
+                                      cap=cap)
+        else:
+            o = _direct_attn(q, _repeat_kv(k, H), _repeat_kv(v, H),
+                             causal_offset=int(1e9), window=0, cap=cap)
+    elif window and S > window and S % window == 0:
+        o = _local_block_attn(q, _repeat_kv(k, H), _repeat_kv(v, H),
+                              window=window, cap=cap)
+    elif window and S > window:
+        # non-aligned lengths: direct masked path (O(S²) fallback)
+        o = _direct_attn(q, _repeat_kv(k, H), _repeat_kv(v, H),
+                         causal_offset=0, window=window, cap=cap)
+    elif S > 8192:
+        o = _flash_attn(q, _repeat_kv(k, H), _repeat_kv(v, H), cap=cap)
+    else:
+        o = _direct_attn(q, _repeat_kv(k, H), _repeat_kv(v, H),
+                         causal_offset=0, window=window, cap=cap)
+
+    if mode == "prefill":
+        if local and window and S > window:
+            # ring-buffer handoff: decode writes slot pos % window, so the
+            # prompt length must align the ring (slot 0 = oldest).
+            assert S % window == 0, (S, window)
+            new_cache = {"k": k[:, -window:], "v": v[:, -window:]}
+        else:
+            new_cache = {"k": k, "v": v}
+
+    out = o.reshape(B, S, cfg.n_heads * cfg.head_dim) @ p["wo"]
+    return out, new_cache

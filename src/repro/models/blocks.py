@@ -1,0 +1,88 @@
+"""Layer-block dispatcher: (mixer kind ∈ {attn, attn_local, mamba, mlstm,
+slstm}) × (FFN ∈ {MLP, MoE, none}) with pre-norms and residuals.
+
+A block kind string like ``"mamba+moe"`` selects the mamba mixer and swaps
+the MLP for MoE (Jamba's every-other-layer MoE).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+from repro.models import attention, moe as moe_lib, ssm, xlstm
+from repro.models.layers import Builder, mlp_init, mlp_apply, rms_norm
+
+
+def parse_kind(kind: str) -> Tuple[str, bool]:
+    base, *mods = kind.split("+")
+    return base, "moe" in mods
+
+
+def block_init(b: Builder, cfg, kind: str) -> dict:
+    base, use_moe = parse_kind(kind)
+    d = cfg.d_model
+    p = {"norm1": b.param((d,), (None,), init="zeros")}
+    if base in ("attn", "attn_local"):
+        p["mixer"] = attention.attn_init(b, cfg)
+    elif base == "mamba":
+        p["mixer"] = ssm.mamba_init(b, cfg)
+    elif base == "mlstm":
+        p["mixer"] = xlstm.mlstm_init(b, cfg)
+    elif base == "slstm":
+        p["mixer"] = xlstm.slstm_init(b, cfg)
+    else:
+        raise ValueError(f"unknown block kind {base!r}")
+    if use_moe:
+        p["norm2"] = b.param((d,), (None,), init="zeros")
+        p["ffn"] = moe_lib.moe_init(b, cfg)
+    elif cfg.d_ff > 0:
+        p["norm2"] = b.param((d,), (None,), init="zeros")
+        p["ffn"] = mlp_init(b, d, cfg.d_ff)
+    return p
+
+
+def block_apply(p, cfg, kind: str, x, cos, sin, *, mode: str = "train",
+                cache: Optional[dict] = None, pos=None,
+                bidirectional: bool = False):
+    """Returns (x, new_mixer_cache, aux_loss)."""
+    base, use_moe = parse_kind(kind)
+    h = rms_norm(x, p["norm1"], cfg.norm_eps)
+    if base in ("attn", "attn_local"):
+        h, nc = attention.attn_apply(
+            p["mixer"], cfg, h, cos, sin, local=(base == "attn_local"),
+            mode=mode, cache=cache, pos=pos, bidirectional=bidirectional)
+    elif base == "mamba":
+        h, nc = ssm.mamba_apply(p["mixer"], cfg, h, mode=mode, cache=cache)
+    elif base == "mlstm":
+        h, nc = xlstm.mlstm_apply(p["mixer"], cfg, h, mode=mode, cache=cache)
+    else:
+        h, nc = xlstm.slstm_apply(p["mixer"], cfg, h, mode=mode, cache=cache)
+    x = x + h
+    aux = jnp.zeros((), jnp.float32)
+    if "ffn" in p:
+        h = rms_norm(x, p["norm2"], cfg.norm_eps)
+        if use_moe:
+            h, aux = moe_lib.moe_apply(p["ffn"], cfg, h)
+        else:
+            h = mlp_apply(p["ffn"], h)
+        x = x + h
+    return x, nc, aux
+
+
+def block_cache(mk, cfg, kind: str, B: int, max_len: int) -> Optional[dict]:
+    base, _ = parse_kind(kind)
+    if base in ("attn", "attn_local"):
+        local = base == "attn_local"
+        size = min(cfg.window, max_len) if (local and cfg.window) else max_len
+        KV, hd = cfg.n_kv_heads, cfg.head_dim
+        return {"k": mk((B, size, KV, hd), ("batch", "seq", "kv_heads", None), None),
+                "v": mk((B, size, KV, hd), ("batch", "seq", "kv_heads", None), None)}
+    if base == "mamba":
+        return ssm.mamba_cache(mk, cfg, B)
+    if base == "mlstm":
+        return xlstm.mlstm_cache(mk, cfg, B)
+    if base == "slstm":
+        return xlstm.slstm_cache(mk, cfg, B)
+    return None

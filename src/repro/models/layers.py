@@ -1,0 +1,148 @@
+"""Model substrate: parameter builder (single source of truth for init /
+logical axes / abstract shapes), norms, MLPs, embeddings.
+
+Every parameter is created through ``Builder.param`` so the same model code
+yields (a) initialized arrays, (b) the logical-axes tree the sharding rules
+consume, (c) ShapeDtypeStruct trees for the dry-run — no mirror drift.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class Axes:
+    """Logical-axis annotation; unregistered class ⇒ a pytree *leaf*."""
+
+    __slots__ = ("names",)
+
+    def __init__(self, names: Tuple[Optional[str], ...]):
+        self.names = tuple(names)
+
+    def __repr__(self):
+        return f"Axes{self.names}"
+
+    def __eq__(self, other):
+        return isinstance(other, Axes) and self.names == other.names
+
+    def __hash__(self):
+        return hash(self.names)
+
+
+class Builder:
+    """mode: 'init' -> arrays; 'axes' -> Axes leaves; 'abstract' -> SDS."""
+
+    def __init__(self, mode: str, key=None, dtype=jnp.bfloat16):
+        assert mode in ("init", "axes", "abstract")
+        self.mode = mode
+        self.key = key
+        self.dtype = dtype
+        self._n = 0
+
+    def _next_key(self):
+        self._n += 1
+        return jax.random.fold_in(self.key, self._n)
+
+    def param(self, shape: Tuple[int, ...], axes: Tuple[Optional[str], ...],
+              init: str = "normal", scale: Optional[float] = None,
+              dtype=None):
+        assert len(shape) == len(axes), (shape, axes)
+        dtype = dtype or self.dtype
+        if self.mode == "axes":
+            return Axes(axes)
+        if self.mode == "abstract":
+            return jax.ShapeDtypeStruct(shape, dtype)
+        if init == "zeros":
+            return jnp.zeros(shape, dtype)
+        if init == "ones":
+            return jnp.ones(shape, dtype)
+        if scale is None:  # fan-in scaled normal
+            fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+            scale = 1.0 / np.sqrt(fan_in)
+        return (jax.random.normal(self._next_key(), shape, jnp.float32)
+                * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms / activations
+# ---------------------------------------------------------------------------
+
+def wsc(x, *spec):
+    """with_sharding_constraint that no-ops outside a mesh context."""
+    try:
+        return jax.lax.with_sharding_constraint(
+            x, jax.sharding.PartitionSpec(*spec))
+    except (ValueError, RuntimeError, TypeError):
+        return x
+
+
+def mesh_axis_size(name: str) -> int:
+    mesh = jax.sharding.get_abstract_mesh()
+    if mesh is None or name not in (mesh.axis_names or ()):
+        return 0
+    return mesh.shape[name]
+
+
+def rms_norm(x: jax.Array, gamma: jax.Array, eps: float = 1e-6) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    out = x32 * jax.lax.rsqrt(var + eps) * (1.0 + gamma.astype(jnp.float32))
+    return out.astype(x.dtype)
+
+
+def softcap(x: jax.Array, cap: float) -> jax.Array:
+    return (cap * jnp.tanh(x.astype(jnp.float32) / cap)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP (LLaMA-family default)
+# ---------------------------------------------------------------------------
+
+def mlp_init(b: Builder, d_model: int, d_ff: int):
+    return {
+        "w_gate": b.param((d_model, d_ff), ("embed", "mlp")),
+        "w_up": b.param((d_model, d_ff), ("embed", "mlp")),
+        "w_down": b.param((d_ff, d_model), ("mlp", "embed")),
+    }
+
+
+def mlp_apply(p, x):
+    h = jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])
+    return h @ p["w_down"]
+
+
+# ---------------------------------------------------------------------------
+# Embedding + LM head
+# ---------------------------------------------------------------------------
+
+def embed_init(b: Builder, vocab: int, d_model: int, tie: bool):
+    p = {"embedding": b.param((vocab, d_model), ("vocab", "embed"), scale=1.0)}
+    if not tie:
+        p["lm_head"] = b.param((d_model, vocab), ("embed", "vocab"))
+    return p
+
+
+def embed_apply(p, tokens: jax.Array, d_model: int) -> jax.Array:
+    # multiply-by-sqrt(d) convention (gemma/llama variants differ; harmless)
+    return p["embedding"][tokens] * jnp.asarray(
+        np.sqrt(d_model), p["embedding"].dtype)
+
+
+def logits_apply(p, x: jax.Array) -> jax.Array:
+    w = p.get("lm_head")
+    if w is None:
+        w = p["embedding"].T
+    return x @ w
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Stable mean CE; logits f32; vocab axis may be model-sharded (GSPMD
+    inserts the reductions)."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - ll)

@@ -1,0 +1,419 @@
+"""Decoder-only LM driver: parameter construction (init / logical-axes /
+abstract via one Builder-driven code path), scan-over-periods stack,
+train / prefill / decode steps.
+
+The layer stack is ``lax.scan`` over *period groups* (DESIGN.md §2):
+compile time and HLO size are O(1) in depth; the roofline analyzer
+multiplies while-body costs by the trip count.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+import os
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import blocks, rope as rope_lib
+from repro.models.layers import (Axes, Builder, cross_entropy, embed_apply,
+                                 embed_init, logits_apply, rms_norm, softcap)
+
+AUX_COEF = 0.01  # MoE load-balance loss weight
+
+
+def _sqrt_group(n_periods: int) -> int:
+    """Group size for two-level remat: the divisor of n closest to √n
+    (1 = plain single-level scan; only used for deep stacks)."""
+    if n_periods < 32:
+        return 1
+    best = 1
+    for g in range(2, n_periods + 1):
+        if n_periods % g == 0 and abs(g - math.isqrt(n_periods)) \
+                < abs(best - math.isqrt(n_periods)):
+            best = g
+    return best if best > 1 else 1
+
+
+# ---------------------------------------------------------------------------
+# Parameter construction
+# ---------------------------------------------------------------------------
+
+def _stack(b: Builder, n: int, fn):
+    """Stack ``n`` copies of ``fn(builder)`` along a leading 'layers' axis."""
+    if b.mode == "init":
+        keys = jax.random.split(b._next_key(), n)
+        return jax.vmap(lambda k: fn(Builder("init", k, b.dtype)))(keys)
+    one = fn(b)
+    if b.mode == "axes":
+        return jax.tree.map(lambda a: Axes(("layers",) + a.names), one)
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct((n,) + s.shape, s.dtype), one)
+
+
+def _build(cfg, mode: str, key=None):
+    b = Builder(mode, key, jnp.dtype(cfg.dtype))
+    p: Dict[str, Any] = {"embed": embed_init(b, cfg.vocab, cfg.d_model,
+                                             cfg.tie_embeddings)}
+
+    def period(bb: Builder):
+        return {f"b{i}": blocks.block_init(bb, cfg, kind)
+                for i, kind in enumerate(cfg.pattern)}
+
+    if cfg.n_periods > 0:
+        p["layers"] = _stack(b, cfg.n_periods, period)
+    if cfg.rem_layers:
+        p["rem"] = {f"b{i}": blocks.block_init(b, cfg, cfg.pattern[i])
+                    for i in range(cfg.rem_layers)}
+    p["final_norm"] = b.param((cfg.d_model,), (None,), init="zeros")
+    return p
+
+
+def init(cfg, key) -> Dict[str, Any]:
+    return _build(cfg, "init", key)
+
+
+def param_axes(cfg) -> Dict[str, Any]:
+    return _build(cfg, "axes")
+
+
+def abstract_params(cfg) -> Dict[str, Any]:
+    return _build(cfg, "abstract")
+
+
+def param_count(cfg) -> int:
+    return sum(int(jnp.prod(jnp.asarray(l.shape)))
+               for l in jax.tree.leaves(abstract_params(cfg)))
+
+
+# ---------------------------------------------------------------------------
+# KV / recurrent caches
+# ---------------------------------------------------------------------------
+
+def _cache_maker(mode: str, default_dtype):
+    def mk(shape, axes, dtype):
+        dtype = dtype or default_dtype
+        if mode == "init":
+            return jnp.zeros(shape, dtype)
+        if mode == "axes":
+            return Axes(tuple(axes))
+        return jax.ShapeDtypeStruct(shape, dtype)
+    return mk
+
+
+def _build_cache(cfg, mode: str, B: int, max_len: int):
+    mk = _cache_maker(mode, jnp.dtype(cfg.dtype))
+
+    def period_cache():
+        return {f"b{i}": blocks.block_cache(mk, cfg, kind, B, max_len)
+                for i, kind in enumerate(cfg.pattern)}
+
+    cache: Dict[str, Any] = {}
+    if cfg.n_periods > 0:
+        one = period_cache()
+        if mode == "axes":
+            cache["layers"] = jax.tree.map(
+                lambda a: Axes(("layers",) + a.names), one)
+        elif mode == "abstract":
+            cache["layers"] = jax.tree.map(
+                lambda s: jax.ShapeDtypeStruct((cfg.n_periods,) + s.shape,
+                                               s.dtype), one)
+        else:
+            cache["layers"] = jax.tree.map(
+                lambda x: jnp.broadcast_to(x, (cfg.n_periods,) + x.shape).copy(), one)
+    if cfg.rem_layers:
+        cache["rem"] = {f"b{i}": blocks.block_cache(mk, cfg, cfg.pattern[i],
+                                                    B, max_len)
+                        for i in range(cfg.rem_layers)}
+    if mode == "axes":
+        cache["pos"] = Axes(())
+    elif mode == "abstract":
+        cache["pos"] = jax.ShapeDtypeStruct((), jnp.int32)
+    else:
+        cache["pos"] = jnp.zeros((), jnp.int32)
+    return cache
+
+
+def init_cache(cfg, B: int, max_len: int):
+    return _build_cache(cfg, "init", B, max_len)
+
+
+def abstract_cache(cfg, B: int, max_len: int):
+    return _build_cache(cfg, "abstract", B, max_len)
+
+
+def cache_axes(cfg, B: int = 1, max_len: int = 2):
+    return _build_cache(cfg, "axes", B, max_len)
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+def forward(cfg, params, tokens: jax.Array, *, mode: str = "train",
+            caches=None, mrope_positions=None
+            ) -> Tuple[jax.Array, Optional[dict], jax.Array]:
+    """Returns (logits, new_caches, aux_loss)."""
+    B, S = tokens.shape
+    # SP residuals (see constrain_batch): measured a net LOSS on the 256-chip
+    # dry-run (deepseek collective 34.8s -> 187s from involuntary resharding;
+    # EXPERIMENTS.md §Perf hypothesis log) — opt-in only.
+    seq_par = mode == "train" and os.environ.get("REPRO_SEQ_PARALLEL") == "1"
+    x = constrain_batch(embed_apply(params["embed"], tokens, cfg.d_model),
+                        seq=seq_par)
+    pos = caches["pos"] if caches is not None else None
+
+    if mode == "decode":
+        positions = jnp.broadcast_to(pos, (B, S))
+    else:
+        positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    if cfg.mrope_sections:
+        if mrope_positions is None:
+            mrope_positions = jnp.broadcast_to(positions, (3, B, S))
+        cos, sin = rope_lib.mrope_angles(mrope_positions, cfg.head_dim,
+                                         cfg.rope_theta, cfg.mrope_sections)
+    else:
+        cos, sin = rope_lib.rope_angles(positions, cfg.head_dim, cfg.rope_theta)
+
+    aux_total = jnp.zeros((), jnp.float32)
+    new_caches: Dict[str, Any] = {}
+
+    def apply_period(x, pparams, pcache, pattern):
+        new_pc = {}
+        aux_sum = jnp.zeros((), jnp.float32)
+        for i, kind in enumerate(pattern):
+            c = pcache[f"b{i}"] if pcache is not None else None
+
+            def one_block(bp, xx, cc, kind=kind):
+                return blocks.block_apply(bp, cfg, kind, xx, cos, sin,
+                                          mode=mode, cache=cc, pos=pos)
+            if cfg.remat and mode == "train" and len(pattern) > 1:
+                # layer-level nested remat: the period-level backward
+                # otherwise keeps ALL blocks' recomputed intermediates live
+                # (measured 28 GiB on Jamba's 8-layer period w/ 4 MoE blocks)
+                one_block = jax.checkpoint(one_block)
+            x, nc, aux = one_block(pparams[f"b{i}"], x, c)
+            x = constrain_batch(x, seq=seq_par)
+            new_pc[f"b{i}"] = nc
+            aux_sum = aux_sum + aux
+        return x, new_pc, aux_sum
+
+    if cfg.n_periods > 0 and mode == "decode" and caches is not None:
+        # Decode: the cache rides the scan CARRY (in-place donation-friendly
+        # aliasing); as xs/ys the stacked cache cannot alias through the
+        # while loop — measured +cache-size temp (16 GiB on deepseek
+        # decode_32k; EXPERIMENTS.md §Perf).
+        def dec_body(carry, xs):
+            x, aux, cache_st = carry
+            pparams, idx = xs
+            pcache = jax.tree.map(
+                lambda c: jax.lax.dynamic_index_in_dim(c, idx, 0,
+                                                       keepdims=False),
+                cache_st)
+            x, new_pc, aux_p = apply_period(x, pparams, pcache, cfg.pattern)
+            cache_st = jax.tree.map(
+                lambda c, n: jax.lax.dynamic_update_index_in_dim(
+                    c, n.astype(c.dtype), idx, 0), cache_st, new_pc)
+            return (x, aux + aux_p, cache_st), None
+
+        (x, aux_total, new_stacked), _ = jax.lax.scan(
+            dec_body, (x, aux_total, caches["layers"]),
+            (params["layers"], jnp.arange(cfg.n_periods)))
+        new_caches["layers"] = new_stacked
+    elif cfg.n_periods > 0:
+        def body(carry, xs):
+            x, aux = carry
+            pparams, pcache = xs
+            x, new_pc, aux_p = apply_period(x, pparams, pcache, cfg.pattern)
+            return (x, aux + aux_p), new_pc
+
+        body_fn = jax.checkpoint(body) if (cfg.remat and mode == "train") else body
+        pcaches = caches["layers"] if caches is not None else None
+        xs = (params["layers"], pcaches)
+        group = _sqrt_group(cfg.n_periods) if (cfg.remat and mode == "train") \
+            else 1
+        if group > 1:
+            # two-level (√n) remat: only n/G outer boundaries stay live
+            # through the backward pass; inner saves are G-bounded transients.
+            def outer_body(carry, xs_g):
+                # the inner body is checkpointed too: otherwise the inner
+                # scan's AD saves ALL group members' layer intermediates
+                # during the outer-group backward (measured 16 GiB on
+                # qwen2-vl's group of 8 × ~2 GiB/layer).
+                return jax.lax.scan(jax.checkpoint(body), carry, xs_g)
+
+            outer_fn = jax.checkpoint(outer_body)
+            xs_g = jax.tree.map(
+                lambda a: a.reshape((cfg.n_periods // group, group)
+                                    + a.shape[1:]), xs)
+            (x, aux_total), stacked_pc = jax.lax.scan(
+                outer_fn, (x, aux_total), xs_g)
+            stacked_pc = jax.tree.map(
+                lambda a: a.reshape((cfg.n_periods,) + a.shape[2:]),
+                stacked_pc)
+        else:
+            (x, aux_total), stacked_pc = jax.lax.scan(body_fn, (x, aux_total),
+                                                      xs)
+        new_caches["layers"] = stacked_pc
+
+    if cfg.rem_layers:
+        rc = caches["rem"] if caches is not None else None
+        x, new_rc, aux_r = apply_period(x, params["rem"], rc,
+                                        cfg.pattern[:cfg.rem_layers])
+        aux_total = aux_total + aux_r
+        new_caches["rem"] = new_rc
+
+    if mode == "prefill":
+        x = x[:, -1:]  # only the last position's logits are consumed —
+        # full-sequence logits at 32k×(unsharded 256k vocab) cost 33 GiB/dev
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = logits_apply(params["embed"], x)
+    if cfg.final_softcap:
+        logits = softcap(logits, cfg.final_softcap)
+    if caches is not None:
+        new_caches["pos"] = pos + (1 if mode == "decode" else 0)
+        return logits, new_caches, aux_total
+    if mode == "prefill":
+        new_caches["pos"] = jnp.asarray(S, jnp.int32)
+        return logits, new_caches, aux_total
+    return logits, None, aux_total
+
+
+# ---------------------------------------------------------------------------
+# Steps
+# ---------------------------------------------------------------------------
+
+def loss_fn(cfg, params, batch) -> jax.Array:
+    logits, _, aux = forward(cfg, params, batch["tokens"], mode="train",
+                             mrope_positions=batch.get("mrope_positions"))
+    return cross_entropy(logits, batch["labels"]) + AUX_COEF * aux
+
+
+def _wsc(x, *spec):
+    """Sharding constraint that degrades to a no-op outside a mesh context
+    (CPU unit tests)."""
+    try:
+        return jax.lax.with_sharding_constraint(
+            x, jax.sharding.PartitionSpec(*spec))
+    except (ValueError, RuntimeError, TypeError):
+        return x
+
+
+def _dp_axes_for(nbatch: int):
+    """DP mesh axes that divide ``nbatch`` under the ambient mesh (or None).
+
+    Activation batch dims MUST be pinned explicitly: the FSDP-sharded
+    embedding table (embed dim over 'data') otherwise propagates
+    feature-over-data sharding into the stack and GSPMD settles on a
+    replicated batch (measured: full-batch dots on every device)."""
+    mesh = jax.sharding.get_abstract_mesh()
+    if mesh is None or not mesh.axis_names:
+        return None
+    for cand in (("pod", "data"), ("data",)):
+        if all(a in mesh.axis_names for a in cand):
+            import math as _m
+            if nbatch % _m.prod(mesh.shape[a] for a in cand) == 0:
+                return cand if len(cand) > 1 else cand[0]
+    return None
+
+
+def constrain_batch(x, bdim: int = 0, seq: bool = False, seq_dim: int = 1):
+    """Pin the batch dim of an activation to the DP axes (no-op if absent).
+
+    ``seq=True`` additionally shards the sequence dim over 'model'
+    (Megatron-style sequence parallelism): applied at *period boundaries*
+    so the scan-carry residuals — the dominant live-range at depth 95 —
+    are 16× smaller; XLA re-gathers at the next block's matmuls, turning
+    the TP all-reduce into all-gather + reduce-scatter (same wire bytes).
+    """
+    mesh = jax.sharding.get_abstract_mesh()
+    if mesh is None or not mesh.axis_names:
+        return x
+    dp = _dp_axes_for(x.shape[bdim])
+    spec = [None] * x.ndim
+    if dp is not None:
+        spec[bdim] = dp
+    if seq and "model" in mesh.axis_names \
+            and x.shape[seq_dim] % mesh.shape["model"] == 0:
+        spec[seq_dim] = "model"
+    if all(s is None for s in spec):
+        return x
+    return _wsc(x, *spec)
+
+
+def microbatch_split(batch: Dict[str, jax.Array], accum: int
+                     ) -> Dict[str, jax.Array]:
+    """Split the global batch into ``accum`` microbatches with a
+    *shard-preserving* layout: ``(B,) -> (mb, accum) -> swap -> (accum, mb)``
+    maps microbatch ``a``, row ``m`` to global row ``m·accum + a`` — each
+    device keeps exactly its own rows, so the split inserts ZERO collectives
+    (a dynamic_slice along the data-sharded dim would gather the batch —
+    measured 16× per-device inflation; see EXPERIMENTS.md §Dry-run notes).
+    """
+    out = {}
+    for k, v in batch.items():
+        if k == "mrope_positions":                   # (3, B, S): batch dim 1
+            mb = v.shape[1] // accum
+            r = v.reshape(3, mb, accum, v.shape[2]).transpose(2, 0, 1, 3)
+            out[k] = _wsc(r, None, None, "data", None)  # (accum, 3, mb, S)
+        else:                                        # (B, ...)
+            mb = v.shape[0] // accum
+            r = v.reshape(mb, accum, *v.shape[1:]).swapaxes(0, 1)
+            out[k] = _wsc(r, None, "data", *([None] * (v.ndim - 1)))
+    return out
+
+
+def make_train_step(cfg, optimizer, accum_steps: int = 1,
+                    grad_shardings=None):
+    """Gradient-accumulated train step: ``batch`` is the GLOBAL batch; a
+    shard-preserving reshape feeds a microbatch ``lax.scan``.
+
+    ``grad_shardings`` (optional NamedSharding tree like params): pins each
+    microbatch's bf16 gradients to the parameter sharding *before* the f32
+    accumulation — the cross-data reduce-scatter then moves bf16, not f32
+    (half the dominant DP wire bytes), and the f32 accumulator itself is
+    fully sharded.
+    """
+
+    def train_step(params, opt_state, batch):
+        micro = microbatch_split(batch, accum_steps)
+
+        def accum_body(carry, mb):
+            gsum, lsum = carry
+            l, g = jax.value_and_grad(lambda p: loss_fn(cfg, p, mb))(params)
+            if grad_shardings is not None:
+                g = jax.tree.map(jax.lax.with_sharding_constraint, g,
+                                 grad_shardings)
+            gsum = jax.tree.map(lambda a, b: a + b.astype(jnp.float32), gsum, g)
+            return (gsum, lsum + l), None
+
+        g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        if grad_shardings is not None:
+            g0 = jax.tree.map(jax.lax.with_sharding_constraint, g0,
+                              grad_shardings)
+        (gsum, lsum), _ = jax.lax.scan(accum_body, (g0, jnp.zeros(())), micro)
+        grads = jax.tree.map(lambda g: (g / accum_steps).astype(cfg.dtype), gsum)
+        new_params, new_opt = optimizer.update(grads, opt_state, params)
+        return new_params, new_opt, {"loss": lsum / accum_steps}
+
+    return train_step
+
+
+def make_prefill_step(cfg):
+    def prefill_step(params, batch):
+        logits, caches, _ = forward(cfg, params, batch["tokens"],
+                                    mode="prefill",
+                                    mrope_positions=batch.get("mrope_positions"))
+        return logits[:, -1], caches
+    return prefill_step
+
+
+def make_decode_step(cfg):
+    def decode_step(params, caches, batch):
+        logits, new_caches, _ = forward(
+            cfg, params, batch["tokens"], mode="decode", caches=caches,
+            mrope_positions=batch.get("mrope_positions"))
+        return logits[:, -1], new_caches
+    return decode_step

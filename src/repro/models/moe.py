@@ -1,0 +1,129 @@
+"""Mixture-of-Experts FFN: top-k softmax router + capacity-bounded
+GShard-style one-hot einsum dispatch at token-CHUNK granularity
+(TPU-native: static shapes, matmul-only dataflow, EP-shardable).
+
+Design history (measured on the 256-chip dry-run, EXPERIMENTS.md §Perf):
+* a GLOBAL (T,E,C) one-hot dispatch is O(T·K·E·C) — unusable at 128
+  experts × 32k tokens;
+* a scatter/gather dispatch is compact but its data-dependent destinations
+  cannot be sharded by GSPMD — expert activations ended up REPLICATED
+  per device (38 GiB on the all-MoE ablation);
+* the committed design chunks tokens (scan, checkpointed bodies) and uses
+  per-chunk (T_c,E,C_c) one-hot einsums: shardings propagate like any
+  matmul, buffers scale with the chunk, and the dispatch FLOPs are the
+  classic GShard tax (~+0.5× of expert compute at qwen3's shapes).
+
+``expert_padding`` pads the expert WEIGHTS (router unchanged) so a 16-∤
+expert count still EP-shards cleanly (qwen2-moe 60→64: 5.3× on the
+dominant collective term for +6.7 % weights).
+
+Supports shared (always-on) experts (Qwen-MoE) and returns the Switch-style
+load-balancing auxiliary loss.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import Builder, mlp_init, mlp_apply, wsc
+
+
+def moe_init(b: Builder, cfg) -> dict:
+    d, dff = cfg.d_model, cfg.d_ff_expert
+    E = cfg.n_experts + cfg.expert_padding  # padded experts never routed
+    p = {
+        "router": b.param((d, cfg.n_experts), ("embed", None),
+                          dtype=jnp.float32),
+        "w_gate": b.param((E, d, dff), ("expert", "embed", "expert_mlp")),
+        "w_up": b.param((E, d, dff), ("expert", "embed", "expert_mlp")),
+        "w_down": b.param((E, dff, d), ("expert", "expert_mlp", "embed")),
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = mlp_init(b, d, cfg.n_shared_experts * dff)
+    return p
+
+
+_MOE_CHUNK_TOKENS = 8192  # global tokens per dispatch chunk
+
+
+def moe_apply(p, cfg, x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """x (B,S,d) -> (out (B,S,d), aux_loss scalar).
+
+    Long sequences are processed in token chunks (scan): the dispatch
+    buffers scale with the chunk, not the sequence — unchunked, the qwen3
+    (128e top-8) prefill_32k cell allocates an (E·C, d) buffer ~40× the
+    activation size (measured OOM; EXPERIMENTS.md §Dry-run).  Chunking is
+    exact for the outputs; the Switch aux loss becomes a per-chunk average
+    (documented deviation, gradient-equivalent in expectation).
+    """
+    B, S, d = x.shape
+    total = B * S
+    if total > _MOE_CHUNK_TOKENS and S % (_MOE_CHUNK_TOKENS // B or 1) == 0 \
+            and _MOE_CHUNK_TOKENS >= B:
+        sc = _MOE_CHUNK_TOKENS // B
+        xcs = x.reshape(B, S // sc, sc, d).swapaxes(0, 1)
+
+        # checkpointed chunk body: WITHOUT it the chunk scan's AD residuals
+        # stack every chunk's (E,C,dff) expert activations — measured
+        # ~24 GiB/dev on jamba train_4k (EXPERIMENTS.md §Perf).
+        @jax.checkpoint
+        def step_inner(xc):
+            return _moe_dense(p, cfg, xc)
+
+        def step(_, xc):
+            out_c, aux_c = step_inner(xc)
+            return None, (out_c, aux_c)
+
+        _, (outs, auxs) = jax.lax.scan(step, None, xcs)
+        return outs.swapaxes(0, 1).reshape(B, S, d), auxs.mean()
+    return _moe_dense(p, cfg, x)
+
+
+def _moe_dense(p, cfg, x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    B, S, d = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    E_pad = E + cfg.expert_padding
+    T = B * S
+    xt = x.reshape(T, d)
+    logits = xt.astype(jnp.float32) @ p["router"].astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)                    # (T, E)
+    gate_vals, expert_idx = jax.lax.top_k(probs, K)            # (T, K)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)                # renormalize
+
+    C = max(1, math.ceil(T * K / E * cfg.capacity_factor))
+    # slot of each (token, k) inside its expert's queue (order-preserving)
+    onehot = jax.nn.one_hot(expert_idx.reshape(T * K), E, dtype=jnp.int32)
+    pos = (jnp.cumsum(onehot, axis=0) - onehot)                # (T·K, E)
+    slot = jnp.take_along_axis(pos, expert_idx.reshape(T * K, 1), axis=1)[:, 0]
+    slot = jnp.where(slot < C, slot, C).reshape(T, K)          # C = dropped
+
+    # GShard-style einsum dispatch at CHUNK granularity.  (A scatter/gather
+    # dispatch kept the expert activations replicated per device — GSPMD
+    # cannot shard data-dependent scatter destinations — measured 38 GiB/dev
+    # on the all-MoE ablation.  One-hot einsums propagate shardings like any
+    # matmul; the (T,E,C) one-hots are small because T is the CHUNK size.)
+    oh_e = (jax.nn.one_hot(expert_idx.reshape(T * K), E_pad, dtype=x.dtype)
+            .reshape(T, K, E_pad))
+    oh_c = jax.nn.one_hot(slot, C + 1, dtype=x.dtype)[..., :C]  # (T,K,C)
+    disp = jnp.einsum("tke,tkc->tec", oh_e, oh_c)
+    comb = jnp.einsum("tke,tkc,tk->tec", oh_e, oh_c,
+                      gate_vals.astype(x.dtype))
+
+    xe = wsc(jnp.einsum("td,tec->ecd", xt, disp), "model")      # EP-sharded
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xe, p["w_gate"])) \
+        * jnp.einsum("ecd,edf->ecf", xe, p["w_up"])
+    ye = wsc(jnp.einsum("ecf,efd->ecd", h, p["w_down"]), "model")
+    out = jnp.einsum("ecd,tec->td", ye, comb)
+
+    # Switch aux loss: E · Σ_e f_e · P_e
+    f = onehot.astype(jnp.float32).reshape(T, K, E).sum(1).mean(0)
+    aux = E * jnp.sum(f * probs.mean(0))
+
+    if cfg.n_shared_experts:
+        out = out + mlp_apply(p["shared"], xt)
+    return out.reshape(B, S, d), aux

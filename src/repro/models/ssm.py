@@ -1,0 +1,145 @@
+"""Mamba selective-SSM block (Jamba's sequence mixer).
+
+Training/prefill uses ``jax.lax.associative_scan`` over the diagonal SSM
+recurrence (TPU-native replacement for the CUDA selective-scan kernel — the
+recurrence ``h_t = a_t·h_{t-1} + b_t`` is associative with combine
+``(a₁,b₁)∘(a₂,b₂) = (a₁a₂, a₂b₁+b₂)``).  Decode carries ``(h, conv window)``
+state — O(1) per token, which is what qualifies the hybrid archs for the
+``long_500k`` cell.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import Builder
+
+
+def _dt_rank(d_model: int) -> int:
+    return max(1, int(np.ceil(d_model / 16)))
+
+
+def mamba_init(b: Builder, cfg) -> dict:
+    d, di, st, k = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_conv
+    dtr = _dt_rank(d)
+    return {
+        "in_proj": b.param((d, 2 * di), ("embed", "inner")),
+        "conv_w": b.param((k, di), (None, "inner"), scale=0.5),
+        "conv_b": b.param((di,), ("inner",), init="zeros"),
+        "x_proj": b.param((di, dtr + 2 * st), ("inner", None)),
+        "dt_proj": b.param((dtr, di), (None, "inner"), scale=0.1),
+        "dt_bias": b.param((di,), ("inner",), init="zeros"),
+        "a_log": b.param((di, st), ("inner", None), init="ones"),
+        "d_skip": b.param((di,), ("inner",), init="ones"),
+        "out_proj": b.param((di, d), ("inner", "embed")),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, bias: jax.Array,
+                 prev: Optional[jax.Array] = None) -> jax.Array:
+    """Depthwise causal conv over time. x (B,T,C), w (k,C).
+    ``prev`` (B,k-1,C): carried window for decode."""
+    k = w.shape[0]
+    if prev is None:
+        prev = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([prev, x], axis=1)
+    T = x.shape[1]
+    out = sum(xp[:, i:i + T] * w[i] for i in range(k))
+    return out + bias
+
+
+def _ssm_params(p, cfg, x):
+    """x (B,T,di) -> (dA (B,T,di,st), dBx (B,T,di,st), C (B,T,st))."""
+    st = cfg.ssm_state
+    dtr = _dt_rank(cfg.d_model)
+    proj = x @ p["x_proj"]
+    dt_in, Bm, Cm = jnp.split(proj, [dtr, dtr + st], axis=-1)
+    dt = jax.nn.softplus(dt_in @ p["dt_proj"] + p["dt_bias"])       # (B,T,di)
+    A = -jnp.exp(p["a_log"].astype(jnp.float32))                    # (di,st)
+    dA = jnp.exp(dt.astype(jnp.float32)[..., None] * A)             # (B,T,di,st)
+    dBx = (dt * x).astype(jnp.float32)[..., None] \
+        * Bm.astype(jnp.float32)[:, :, None, :]                 # (B,T,di,st)
+    return dA, dBx, Cm
+
+
+_SCAN_CHUNK = 1024
+
+
+def _selective_scan_chunked(p, cfg, xm_c: jax.Array
+                            ) -> Tuple[jax.Array, jax.Array]:
+    """Selective scan in sequence chunks: ``lax.scan`` carries the SSM state
+    across chunks; ``associative_scan`` parallelizes within a chunk.
+
+    The recurrence is linear, so chunking is EXACT — and it bounds the f32
+    ``(B, chunk, d_inner, state)`` buffers to the chunk length.  Unchunked,
+    prefill_32k materializes (B, 32768, d_inner, 16) f32 ≈ 8.6 GiB/layer per
+    device (measured OOM against the 16 GiB budget; EXPERIMENTS.md §Dry-run).
+    """
+    B, T, di = xm_c.shape
+    chunk = min(_SCAN_CHUNK, T)
+    if T % chunk:
+        chunk = T  # fallback: no clean chunking
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, a2 * b1 + b2
+
+    @jax.checkpoint  # avoid stacking per-chunk (B,c,di,st) f32 AD residuals
+    def chunk_step(h0, xc):
+        dA, dBx, Cm = _ssm_params(p, cfg, xc)
+        # fold the carried state into the first element: b'_1 = dA_1 h0 + b_1
+        dBx = dBx.at[:, 0].add(dA[:, 0] * h0)
+        _, hs = jax.lax.associative_scan(combine, (dA, dBx), axis=1)
+        yc = jnp.einsum("btds,bts->btd", hs, Cm.astype(jnp.float32))
+        return hs[:, -1], yc
+
+    if chunk == T:
+        h_last, y = chunk_step(jnp.zeros((B, di, cfg.ssm_state), jnp.float32),
+                               xm_c)
+        return y, h_last
+    xcs = xm_c.reshape(B, T // chunk, chunk, di).swapaxes(0, 1)
+    h_last, ys = jax.lax.scan(
+        chunk_step, jnp.zeros((B, di, cfg.ssm_state), jnp.float32), xcs)
+    y = ys.swapaxes(0, 1).reshape(B, T, -1)
+    return y, h_last
+
+
+def mamba_apply(p, cfg, x: jax.Array, *, mode: str = "train",
+                cache: Optional[dict] = None
+                ) -> Tuple[jax.Array, Optional[dict]]:
+    B, T, _ = x.shape
+    di = cfg.d_inner
+    xz = x @ p["in_proj"]
+    xm, z = jnp.split(xz, 2, axis=-1)
+
+    new_cache = None
+    if mode == "decode":
+        assert cache is not None and T == 1
+        conv_win = jnp.concatenate([cache["conv"], xm], axis=1)     # (B,k,di)
+        xm_c = jax.nn.silu(_causal_conv(xm, p["conv_w"], p["conv_b"],
+                                        prev=cache["conv"]))
+        dA, dBx, Cm = _ssm_params(p, cfg, xm_c)
+        h = dA[:, 0] * cache["h"] + dBx[:, 0]                        # (B,di,st)
+        y = jnp.einsum("bds,bs->bd", h, Cm[:, 0].astype(jnp.float32))[:, None]
+        new_cache = {"h": h, "conv": conv_win[:, 1:]}
+    else:
+        xm_c = jax.nn.silu(_causal_conv(xm, p["conv_w"], p["conv_b"]))
+        y, h_last = _selective_scan_chunked(p, cfg, xm_c)
+        if mode == "prefill":
+            new_cache = {"h": h_last,
+                         "conv": xm[:, -(cfg.ssm_conv - 1):]}
+
+    y = (y + xm_c.astype(jnp.float32) * p["d_skip"].astype(jnp.float32))
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    return y @ p["out_proj"], new_cache
+
+
+def mamba_cache(mk, cfg, B: int) -> dict:
+    di, st, k = cfg.d_inner, cfg.ssm_state, cfg.ssm_conv
+    return {"h": mk((B, di, st), ("batch", "inner", None), jnp.float32),
+            "conv": mk((B, k - 1, di), ("batch", None, "inner"), None)}

@@ -1,0 +1,284 @@
+"""xLSTM blocks (Beck et al. 2024): mLSTM (matrix-memory, parallelizable)
+and sLSTM (scalar-memory, recurrent with exponential gating).
+
+mLSTM training/prefill uses the stabilized *parallel* (quadratic) form —
+attention-like, TPU/MXU-friendly; decode uses the recurrent matrix-memory
+update (O(1) state ⇒ long_500k eligible).  sLSTM is inherently sequential:
+``lax.scan`` over time (its block-diagonal per-head recurrence is tiny).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import Builder, rms_norm
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def mlstm_init(b: Builder, cfg) -> dict:
+    d, H = cfg.d_model, cfg.n_heads
+    di = 2 * d                       # xLSTM up-projection factor 2
+    k = cfg.ssm_conv
+    return {
+        "up_proj": b.param((d, 2 * di), ("embed", "inner")),
+        "conv_w": b.param((k, di), (None, "inner"), scale=0.5),
+        "conv_b": b.param((di,), ("inner",), init="zeros"),
+        "wq": b.param((di, di), ("inner", "heads")),
+        "wk": b.param((di, di), ("inner", "heads")),
+        "wv": b.param((di, di), ("inner", "heads")),
+        "w_igate": b.param((di, H), ("inner", None), scale=0.01),
+        "b_igate": b.param((H,), (None,), init="zeros"),
+        "w_fgate": b.param((di, H), ("inner", None), scale=0.01),
+        "b_fgate": b.param((H,), (None,), init="ones"),
+        "out_norm": b.param((di,), ("inner",), init="zeros"),
+        "down_proj": b.param((di, d), ("inner", "embed")),
+    }
+
+
+def _mlstm_parallel(q, k, v, log_i, log_f):
+    """Stabilized parallel mLSTM.  q,k,v (B,T,H,dh); gates (B,T,H)."""
+    B, T, H, dh = q.shape
+    logsig_f = jax.nn.log_sigmoid(log_f.astype(jnp.float32))
+    F = jnp.cumsum(logsig_f, axis=1)                          # (B,T,H)
+    # D[t,s] = F_t - F_s + i_s  for s <= t
+    D = F[:, :, None] - F[:, None, :] + log_i.astype(jnp.float32)[:, None, :]
+    tpos = jnp.arange(T)                                      # D: (B,T,S,H)
+    D = jnp.where((tpos[:, None] >= tpos[None, :])[None, :, :, None],
+                  D, -jnp.inf)
+    m = jnp.max(D, axis=2, keepdims=True)                     # (B,T,1,H)
+    m = jnp.maximum(m, 0.0)
+    W = jnp.exp(D - m)                                        # (B,T,S,H)
+    s = jnp.einsum("bthd,bshd->btsh", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / np.sqrt(dh)
+    sw = s * W
+    n = jnp.maximum(jnp.abs(sw.sum(2, keepdims=True)), jnp.exp(-m))
+    h = jnp.einsum("btsh,bshd->bthd", sw / n, v.astype(jnp.float32))
+    return h.astype(q.dtype)
+
+
+_MLSTM_CHUNK = 1024
+
+
+def _mlstm_chunkwise(q, k, v, log_i, log_f, chunk: int = _MLSTM_CHUNK):
+    """Chunkwise-parallel mLSTM (GLA/xLSTM chunk kernels, stabilized).
+
+    Exact: within-chunk quadratic (``chunk²`` tile) + inter-chunk matrix
+    memory carried recurrently.  Unchunked, the (B,T,T,H) decay matrix at
+    prefill_32k is ~4 TiB — the chunkwise form bounds it to (B,c,c,H).
+
+    Returns (h (B,T,H,dh), final (C', n', m) state with C' stabilized by m).
+    """
+    B, T, H, dh = q.shape
+    nc = T // chunk
+    assert T % chunk == 0, (T, chunk)
+    q32 = q.astype(jnp.float32)
+    k32 = k.astype(jnp.float32)
+    v32 = v.astype(jnp.float32)
+    li = log_i.astype(jnp.float32)
+    lf = jax.nn.log_sigmoid(log_f.astype(jnp.float32))
+
+    def reshape_c(x):
+        return x.reshape(B, nc, chunk, *x.shape[2:]).swapaxes(0, 1)
+
+    qs, ks, vs, lis, lfs = map(reshape_c, (q32, k32, v32, li, lf))
+
+    def chunk_step(carry, xs):
+        C0, n0, m0 = carry                     # C0,n0 stabilized by m0
+        qc, kc, vc, lic, lfc = xs              # (B,c,H,*) / (B,c,H)
+        ksc = kc / np.sqrt(dh)                 # decode-path convention
+        F = jnp.cumsum(lfc, axis=1)            # (B,c,H)
+        # intra-chunk decay matrix D[t,s] = F_t - F_s + i_s (s<=t)
+        D = F[:, :, None] - F[:, None, :] + lic[:, None, :]
+        tpos = jnp.arange(chunk)
+        causal = (tpos[:, None] >= tpos[None, :])[None, :, :, None]
+        D = jnp.where(causal, D, -jnp.inf)
+        inter_log = F + m0[:, None]            # weight of C0 at position t
+        m = jnp.maximum(jnp.max(D, axis=2), inter_log)   # (B,c,H)
+        m = jnp.maximum(m, 0.0)
+        W = jnp.exp(D - m[:, :, None])                   # (B,c,c,H)
+        s = jnp.einsum("bthd,bshd->btsh", qc, ksc)
+        sw = s * W
+        inter_w = jnp.exp(inter_log - m)                 # (B,c,H)
+        num = jnp.einsum("btsh,bshd->bthd", sw, vc) \
+            + inter_w[..., None] * jnp.einsum("bthd,bhde->bthe", qc, C0)
+        den = jnp.abs(sw.sum(2) + inter_w *
+                      jnp.einsum("bthd,bhd->bth", qc, n0))
+        den = jnp.maximum(den, jnp.exp(-m))
+        h = num / den[..., None]
+        # end-of-chunk state under the new stabilizer m_end
+        Ftot = F[:, -1]                                   # (B,H)
+        decay_s = Ftot[:, None] - F + lic                 # (B,c,H)
+        m_end = jnp.maximum(Ftot + m0, jnp.max(decay_s, axis=1))
+        wgt = jnp.exp(decay_s - m_end[:, None])           # (B,c,H)
+        C_new = jnp.exp(Ftot + m0 - m_end)[..., None, None] * C0 \
+            + jnp.einsum("bsh,bshd,bshe->bhde", wgt, ksc, vc)
+        n_new = jnp.exp(Ftot + m0 - m_end)[..., None] * n0 \
+            + jnp.einsum("bsh,bshd->bhd", wgt, ksc)
+        return (C_new, n_new, m_end), h
+
+    C0 = jnp.zeros((B, H, dh, dh), jnp.float32)
+    n0 = jnp.zeros((B, H, dh), jnp.float32)
+    m0 = jnp.full((B, H), -1e30, jnp.float32)
+    (C, n, m), hs = jax.lax.scan(chunk_step, (C0, n0, m0),
+                                 (qs, ks, vs, lis, lfs))
+    h = hs.swapaxes(0, 1).reshape(B, T, H, dh)
+    return h.astype(q.dtype), (C, n, m)
+
+
+def mlstm_apply(p, cfg, x: jax.Array, *, mode: str = "train",
+                cache: Optional[dict] = None
+                ) -> Tuple[jax.Array, Optional[dict]]:
+    B, T, d = x.shape
+    H = cfg.n_heads
+    di = 2 * d
+    dh = di // H
+    xz = x @ p["up_proj"]
+    xm, z = jnp.split(xz, 2, axis=-1)
+
+    new_cache = None
+    if mode == "decode":
+        assert cache is not None and T == 1
+        conv_win = jnp.concatenate([cache["conv"], xm], axis=1)
+        xc = jax.nn.silu(
+            sum(conv_win[:, i:i + 1] * p["conv_w"][i]
+                for i in range(cfg.ssm_conv)) + p["conv_b"])
+        q = (xc @ p["wq"]).reshape(B, 1, H, dh)[:, 0]
+        k = (xc @ p["wk"]).reshape(B, 1, H, dh)[:, 0] / np.sqrt(dh)
+        v = (xc @ p["wv"]).reshape(B, 1, H, dh)[:, 0]
+        log_i = (xc[:, 0] @ p["w_igate"] + p["b_igate"]).astype(jnp.float32)
+        log_f = jax.nn.log_sigmoid(
+            (xc[:, 0] @ p["w_fgate"] + p["b_fgate"]).astype(jnp.float32))
+        m_new = jnp.maximum(log_f + cache["m"], log_i)        # (B,H)
+        i_s = jnp.exp(log_i - m_new)
+        f_s = jnp.exp(log_f + cache["m"] - m_new)
+        C = f_s[..., None, None] * cache["C"] + \
+            i_s[..., None, None] * jnp.einsum(
+                "bhd,bhe->bhde", k.astype(jnp.float32), v.astype(jnp.float32))
+        nvec = f_s[..., None] * cache["n"] + i_s[..., None] * k.astype(jnp.float32)
+        num = jnp.einsum("bhde,bhd->bhe", C, q.astype(jnp.float32))
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", nvec,
+                                             q.astype(jnp.float32))),
+                          jnp.exp(-m_new))
+        h = (num / den[..., None]).reshape(B, 1, di).astype(x.dtype)
+        new_cache = {"C": C, "n": nvec, "m": m_new, "conv": conv_win[:, 1:]}
+    else:
+        xc = jax.nn.silu(
+            sum(jnp.pad(xm, ((0, 0), (cfg.ssm_conv - 1 - i, 0), (0, 0)))[:, :T]
+                * p["conv_w"][i] for i in range(cfg.ssm_conv)) + p["conv_b"])
+        q = (xc @ p["wq"]).reshape(B, T, H, dh)
+        k = (xc @ p["wk"]).reshape(B, T, H, dh)   # raw; forms scale internally
+        v = (xc @ p["wv"]).reshape(B, T, H, dh)
+        log_i = xc @ p["w_igate"] + p["b_igate"]
+        log_f = xc @ p["w_fgate"] + p["b_fgate"]
+        chunk = min(_MLSTM_CHUNK, T)
+        if T % chunk:
+            chunk = T
+        h, (C, n, m) = _mlstm_chunkwise(q, k, v, log_i, log_f, chunk=chunk)
+        h = h.reshape(B, T, di)
+        if mode == "prefill":
+            new_cache = {"C": C, "n": n, "m": m,
+                         "conv": xm[:, -(cfg.ssm_conv - 1):]}
+
+    h = rms_norm(h, p["out_norm"], cfg.norm_eps) * jax.nn.silu(z)
+    return h @ p["down_proj"], new_cache
+
+
+def mlstm_cache(mk, cfg, B: int) -> dict:
+    H = cfg.n_heads
+    di = 2 * cfg.d_model
+    dh = di // H
+    return {"C": mk((B, H, dh, dh), ("batch", None, None, None), jnp.float32),
+            "n": mk((B, H, dh), ("batch", None, None), jnp.float32),
+            "m": mk((B, H), ("batch", None), jnp.float32),
+            "conv": mk((B, cfg.ssm_conv - 1, di), ("batch", None, "inner"), None)}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def _slstm_ff(d: int) -> int:
+    """xLSTM sLSTM post-MLP (proj factor 4/3), rounded to the 128-lane unit."""
+    return ((4 * d // 3) + 127) // 128 * 128
+
+
+def slstm_init(b: Builder, cfg) -> dict:
+    d, H = cfg.d_model, cfg.n_heads
+    dh = d // H
+    ff = _slstm_ff(d)
+    return {
+        "w": b.param((d, 4 * d), ("embed", "inner")),
+        "r": b.param((H, dh, 4 * dh), (None, None, "inner"), scale=0.1),
+        "b": b.param((4 * d,), ("inner",), init="zeros"),
+        "out_norm": b.param((d,), (None,), init="zeros"),
+        "up_gate": b.param((d, ff), ("embed", "mlp")),
+        "up": b.param((d, ff), ("embed", "mlp")),
+        "down": b.param((ff, d), ("mlp", "embed")),
+    }
+
+
+def _slstm_step(p, cfg, xt, state):
+    """One sLSTM step. xt (B,d); state: c,n,h (B,H,dh), m (B,H,dh)."""
+    B, d = xt.shape
+    H = cfg.n_heads
+    dh = d // H
+    c, n, h, m = state
+    wx = (xt @ p["w"]).reshape(B, H, 4 * dh)
+    rh = jnp.einsum("bhd,hde->bhe", h, p["r"].astype(h.dtype))
+    g = (wx + rh + p["b"].reshape(H, 4 * dh)).astype(jnp.float32)
+    gi, gf, gz, go = jnp.split(g, 4, axis=-1)                 # (B,H,dh)
+    m_new = jnp.maximum(gf + m, gi)                           # exp-gate stabilizer
+    i_s = jnp.exp(gi - m_new)
+    f_s = jnp.exp(gf + m - m_new)
+    c = f_s * c + i_s * jnp.tanh(gz)
+    n = f_s * n + i_s
+    h_new = jax.nn.sigmoid(go) * c / jnp.maximum(n, 1e-6)
+    return (c, n, h_new.astype(jnp.float32), m_new), h_new
+
+
+def slstm_apply(p, cfg, x: jax.Array, *, mode: str = "train",
+                cache: Optional[dict] = None
+                ) -> Tuple[jax.Array, Optional[dict]]:
+    B, T, d = x.shape
+    H = cfg.n_heads
+    dh = d // H
+    if cache is not None:
+        state = (cache["c"], cache["n"], cache["h"], cache["m"])
+    else:
+        z = jnp.zeros((B, H, dh), jnp.float32)
+        state = (z, z, z, jnp.full((B, H, dh), -1e30, jnp.float32))
+
+    if mode == "decode":
+        state, h = _slstm_step(p, cfg, x[:, 0], state)
+        hs = h[:, None]
+    else:
+        def step(carry, xt):
+            carry, h = _slstm_step(p, cfg, xt, carry)
+            return carry, h
+        state, hs = jax.lax.scan(step, state, x.swapaxes(0, 1))
+        hs = hs.swapaxes(0, 1)                                # (B,T,H,dh)
+
+    y = rms_norm(hs.reshape(B, -1, d).astype(x.dtype), p["out_norm"],
+                 cfg.norm_eps)
+    y = (jax.nn.silu(y @ p["up_gate"]) * (y @ p["up"])) @ p["down"]
+    new_cache = None
+    if mode in ("decode", "prefill"):
+        c, n, h, m = state
+        new_cache = {"c": c, "n": n, "h": h, "m": m}
+    return y, new_cache
+
+
+def slstm_cache(mk, cfg, B: int) -> dict:
+    H = cfg.n_heads
+    dh = cfg.d_model // H
+    shp = (B, H, dh)
+    ax = ("batch", None, None)
+    return {"c": mk(shp, ax, jnp.float32), "n": mk(shp, ax, jnp.float32),
+            "h": mk(shp, ax, jnp.float32), "m": mk(shp, ax, jnp.float32)}

@@ -1,0 +1,22 @@
+"""Optimizer registry. ``make('gwt', lr=..., level=3)`` etc."""
+
+from repro.optim.base import Optimizer, default_eligible, global_norm
+from repro.optim import hosts, schedules
+from repro.optim.standard import adam, adam_mini, muon, sgd, from_host
+from repro.optim.lowrank import galore, apollo, fira
+
+
+def make(name: str, **kw) -> Optimizer:
+    from repro.core.gwt import gwt  # local import to avoid cycle
+    registry = {
+        "adam": adam, "adam_mini": adam_mini, "muon": muon, "sgd": sgd,
+        "galore": galore, "apollo": apollo, "fira": fira, "gwt": gwt,
+    }
+    if name not in registry:
+        raise ValueError(f"unknown optimizer {name!r}; choices: {sorted(registry)}")
+    return registry[name](**kw)
+
+
+__all__ = ["Optimizer", "make", "adam", "adam_mini", "muon", "sgd", "galore",
+           "apollo", "fira", "from_host", "default_eligible", "global_norm",
+           "hosts", "schedules"]

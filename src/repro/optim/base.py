@@ -1,0 +1,82 @@
+"""Optimizer substrate: a minimal self-contained optax-style interface.
+
+``Optimizer.init(params) -> state``;
+``Optimizer.update(grads, state, params) -> (new_params, new_state)``.
+
+Leaf addressing uses '/'-joined path strings from
+``jax.tree_util.tree_flatten_with_path`` so that module-wise policies
+(the paper's "GWT on attention+MLP, Adam elsewhere") are name-driven and
+architecture-agnostic.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+OptState = Any
+Grads = Any
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Params], OptState]
+    update: Callable[[Grads, OptState, Params], Tuple[Params, OptState]]
+
+
+def path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        elif hasattr(p, "name"):
+            parts.append(str(p.name))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def map_with_path(fn, tree, *rest):
+    """tree_map with a '/'-joined path string as first arg."""
+    return jax.tree_util.tree_map_with_path(
+        lambda kp, *leaves: fn(path_str(kp), *leaves), tree, *rest)
+
+
+def flatten_with_paths(tree):
+    """Returns ``(paths, leaves, treedef)`` with '/'-joined path strings.
+
+    Per-leaf optimizers store their states as a *tuple aligned with this
+    flattening order* — sidestepping pytree-structure mismatches between
+    param trees (array leaves) and state trees (dict-of-arrays leaves).
+    """
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    paths = [path_str(kp) for kp, _ in flat]
+    leaves = [l for _, l in flat]
+    return paths, leaves, treedef
+
+
+# Default deny-list: parameters that never get subspace compression
+# (embeddings, output head, norms, biases, 1-D tensors).  Matches the
+# paper's module-wise strategy ("attention and MLP modules", the rest on
+# plain Adam).
+_DENY_SUBSTRINGS = ("embed", "lm_head", "norm", "scale", "bias", "pos_",
+                    "router", "a_log", "dt_bias", "conv")
+
+
+def default_eligible(path: str, leaf: jax.Array, block: int = 1) -> bool:
+    """True if ``leaf`` should get subspace/wavelet-compressed states."""
+    lname = path.lower()
+    if any(s in lname for s in _DENY_SUBSTRINGS):
+        return False
+    if leaf.ndim < 2:
+        return False
+    return leaf.shape[-1] % block == 0 or leaf.shape[-2] % block == 0
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(l.astype(jnp.float32) ** 2) for l in leaves))

@@ -1,0 +1,149 @@
+"""Host optimizers operating on a single array — the "memory-intensive
+optimizer" slot of the paper's Algorithm 1 (Adam by default; Adam-mini and
+MUON per Fig. 4 "GWT is optimizer-agnostic").
+
+Interface::
+
+    host.init(arr)                 -> state pytree (shaped like the compressed rep)
+    host.update(g, state, step)    -> (precond_update, detail_scale, lr_mult, state)
+
+* ``precond_update``: the preconditioned update of the (possibly compressed)
+  gradient ``g`` — e.g. Adam's ``M/(√V+ε)`` (bias correction folded into
+  ``lr_mult`` exactly as Algorithm 1's ``η_t``).
+* ``detail_scale``: the diagonal preconditioner to apply to wavelet *detail*
+  bands (paper: ``1/(√V^R+ε)``), or ``None`` when the host has no diagonal
+  preconditioner (MUON — details pass through unscaled; the paper leaves the
+  non-Adam detail path unspecified, see DESIGN.md §2).
+* ``lr_mult``: per-step scalar folded into the learning rate.
+
+States are kept in ``state_dtype`` (default f32); math in f32.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Host(NamedTuple):
+    init: Callable[[jax.Array], Any]
+    update: Callable[[jax.Array, Any, jax.Array], Tuple[jax.Array, Optional[jax.Array], jax.Array, Any]]
+    name: str = "host"
+
+
+def _f32(x):
+    return x.astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Adam (Kingma & Ba) — Algorithm 1's default host.
+# ---------------------------------------------------------------------------
+
+def adam(b1: float = 0.9, b2: float = 0.999, eps: float = 1e-6,
+         state_dtype=jnp.float32) -> Host:
+    def init(arr):
+        z = jnp.zeros(arr.shape, state_dtype)
+        return {"m": z, "v": z}
+
+    def update(g, state, step):
+        g32 = _f32(g)
+        m = b1 * _f32(state["m"]) + (1 - b1) * g32
+        v = b2 * _f32(state["v"]) + (1 - b2) * g32 * g32
+        denom = jnp.sqrt(v) + eps
+        precond = m / denom
+        t = step.astype(jnp.float32) + 1.0
+        lr_mult = jnp.sqrt(1 - b2 ** t) / (1 - b1 ** t)
+        new_state = {"m": m.astype(state_dtype), "v": v.astype(state_dtype)}
+        return precond, 1.0 / denom, lr_mult, new_state
+
+    return Host(init, update, "adam")
+
+
+# ---------------------------------------------------------------------------
+# Adam-mini (Zhang et al. 2024): one second-moment per block.  For matmul
+# weights we use one ``v`` per output row (neuron/head granularity) — the
+# paper's LM partition collapsed to the row level.  Halves Adam's state.
+# ---------------------------------------------------------------------------
+
+def adam_mini(b1: float = 0.9, b2: float = 0.999, eps: float = 1e-6,
+              state_dtype=jnp.float32) -> Host:
+    def init(arr):
+        m = jnp.zeros(arr.shape, state_dtype)
+        if arr.ndim >= 2:
+            v = jnp.zeros(arr.shape[:-1] + (1,), state_dtype)
+        else:
+            v = jnp.zeros((), state_dtype)
+        return {"m": m, "v": v}
+
+    def update(g, state, step):
+        g32 = _f32(g)
+        m = b1 * _f32(state["m"]) + (1 - b1) * g32
+        gsq = jnp.mean(g32 * g32, axis=-1, keepdims=True) if g32.ndim >= 2 \
+            else jnp.mean(g32 * g32)
+        v = b2 * _f32(state["v"]) + (1 - b2) * gsq
+        denom = jnp.sqrt(v) + eps
+        precond = m / denom
+        t = step.astype(jnp.float32) + 1.0
+        lr_mult = jnp.sqrt(1 - b2 ** t) / (1 - b1 ** t)
+        new_state = {"m": m.astype(state_dtype), "v": v.astype(state_dtype)}
+        return precond, 1.0 / denom, lr_mult, new_state
+
+    return Host(init, update, "adam_mini")
+
+
+# ---------------------------------------------------------------------------
+# MUON (Liu et al. 2025): momentum + Newton-Schulz orthogonalization.
+# Momentum-only state (half of Adam).  2-D (or batched 2-D) arrays only —
+# callers fall back to Adam elsewhere.
+# ---------------------------------------------------------------------------
+
+_NS_COEFFS = (3.4445, -4.7750, 2.0315)
+
+
+def newton_schulz(m: jax.Array, steps: int = 5) -> jax.Array:
+    """Quintic Newton-Schulz iteration orthogonalizing the last two dims."""
+    a, b, c = _NS_COEFFS
+    x = _f32(m)
+    transpose = x.shape[-2] > x.shape[-1]
+    if transpose:
+        x = jnp.swapaxes(x, -1, -2)
+    x = x / (jnp.linalg.norm(x, axis=(-2, -1), keepdims=True) + 1e-7)
+
+    def body(x, _):
+        xxt = x @ jnp.swapaxes(x, -1, -2)
+        x = a * x + (b * xxt + c * (xxt @ xxt)) @ x
+        return x, None
+
+    x, _ = jax.lax.scan(body, x, None, length=steps)
+    if transpose:
+        x = jnp.swapaxes(x, -1, -2)
+    return x
+
+
+def muon(beta: float = 0.95, ns_steps: int = 5, nesterov: bool = True,
+         state_dtype=jnp.float32) -> Host:
+    def init(arr):
+        return {"m": jnp.zeros(arr.shape, state_dtype)}
+
+    def update(g, state, step):
+        g32 = _f32(g)
+        m = beta * _f32(state["m"]) + g32
+        eff = g32 + beta * m if nesterov else m
+        o = newton_schulz(eff, ns_steps)
+        # RMS-matching scale (Muon convention): sqrt(max(1, rows/cols)).
+        rows, cols = o.shape[-2], o.shape[-1]
+        o = o * jnp.sqrt(jnp.maximum(1.0, rows / cols))
+        return o, None, jnp.asarray(1.0, jnp.float32), {"m": m.astype(state_dtype)}
+
+    return Host(init, update, "muon")
+
+
+HOSTS = {"adam": adam, "adam_mini": adam_mini, "muon": muon}
+
+
+def make_host(name: str, **kw) -> Host:
+    if name not in HOSTS:
+        raise ValueError(f"unknown host optimizer {name!r}; choices: {sorted(HOSTS)}")
+    return HOSTS[name](**kw)

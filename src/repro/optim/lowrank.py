@@ -1,0 +1,176 @@
+"""Low-rank baselines the paper compares against (Table II/III):
+
+* **GaLore** (Zhao et al. 2024): SVD projection of gradients; Adam states in
+  the rank-r subspace; projector refreshed every ``update_gap`` steps.
+* **APOLLO** (Zhu et al. 2024): SVD-free — random projection + channel-wise
+  gradient scaling; full-rank update direction.
+* **Fira** (Chen et al. 2024): GaLore + scaled full-rank residual + NL.
+
+All share the per-leaf routing of GWT: eligible ≥2-D weights get compressed
+states, the rest run plain Adam.  ``rank_frac`` (e.g. 1/4, 1/8) matches the
+paper's GaLore-1/4 / GaLore-1/8 naming: ``r = rank_frac · min(m, n)``.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import limiter
+from repro.optim import hosts as hosts_lib
+from repro.optim.base import Optimizer, default_eligible, flatten_with_paths
+from repro.optim.schedules import Schedule, constant
+
+
+def _norm_lr(lr):
+    return constant(lr) if isinstance(lr, (int, float)) else lr
+
+
+def _rank(p, rank, rank_frac):
+    if rank is not None:
+        return max(1, min(rank, min(p.shape[-2:])))
+    return max(1, int(min(p.shape[-2:]) * rank_frac))
+
+
+def _project_left(p) -> bool:
+    """GaLore projects the smaller side: left if rows <= cols."""
+    return p.shape[-2] <= p.shape[-1]
+
+
+def _svd_projector(g, r, left):
+    g32 = g.astype(jnp.float32)
+    u, _, vt = jnp.linalg.svd(g32, full_matrices=False)
+    return u[..., :, :r] if left else jnp.swapaxes(vt, -1, -2)[..., :, :r]
+
+
+def _rand_projector(key, p, r, left, dtype=jnp.float32):
+    m = p.shape[-2] if left else p.shape[-1]
+    shape = p.shape[:-2] + (m, r)
+    return jax.random.normal(key, shape, dtype) / jnp.sqrt(r).astype(dtype)
+
+
+def _down(g, proj, left):
+    """Full grad -> subspace: (r×n) = Pᵀ G  or  (m×r) = G P."""
+    pt = jnp.swapaxes(proj, -1, -2)
+    return pt @ g.astype(proj.dtype) if left else g.astype(proj.dtype) @ proj
+
+
+def _up(rlow, proj, left):
+    return proj @ rlow if left else rlow @ jnp.swapaxes(proj, -1, -2)
+
+
+def _make_lowrank(name: str,
+                  lr, rank, rank_frac, alpha, update_gap,
+                  eligible, use_limiter_flag, gamma,
+                  seed: int, state_dtype,
+                  b1=0.9, b2=0.999, eps=1e-6) -> Optimizer:
+    lr = _norm_lr(lr)
+    host = hosts_lib.adam(b1, b2, eps, state_dtype)
+    elig = eligible or default_eligible
+
+    def leaf_is_lowrank(path, p):
+        return elig(path, p) and p.ndim >= 2 and min(p.shape[-2:]) >= 2
+
+    def init(params):
+        paths, leaves, _ = flatten_with_paths(params)
+        states = []
+        for i, (path, p) in enumerate(zip(paths, leaves)):
+            if not leaf_is_lowrank(path, p):
+                states.append({"host": host.init(p)})
+                continue
+            r = _rank(p, rank, rank_frac)
+            left = _project_left(p)
+            m = p.shape[-2] if left else p.shape[-1]
+            low_shape = (p.shape[:-2] + (r, p.shape[-1])) if left \
+                else (p.shape[:-2] + (p.shape[-2], r))
+            st = {"host": host.init(jax.ShapeDtypeStruct(low_shape, state_dtype)),
+                  "proj": jnp.zeros(p.shape[:-2] + (m, r), jnp.float32)}
+            if name in ("fira", "apollo"):
+                st["prev_norm"] = jnp.zeros((), jnp.float32)
+            states.append(st)
+        return {"step": jnp.zeros((), jnp.int32), "leaves": tuple(states)}
+
+    def update(grads, state, params):
+        step = state["step"]
+        lr_t = lr(step)
+        paths, gleaves, treedef = flatten_with_paths(grads)
+        pleaves = jax.tree_util.tree_leaves(params)
+        new_p, new_s = [], []
+        for li, (path, g, ls, p) in enumerate(
+                zip(paths, gleaves, state["leaves"], pleaves)):
+            out = dict(ls)
+            if not leaf_is_lowrank(path, p):
+                precond, _, lr_mult, out["host"] = host.update(g, ls["host"], step)
+                q = p.astype(jnp.float32) - (lr_t * lr_mult) * precond.astype(jnp.float32)
+                new_p.append(q.astype(p.dtype))
+                new_s.append(out)
+                continue
+
+            r = _rank(p, rank, rank_frac)
+            left = _project_left(p)
+            refresh = (step % update_gap) == 0
+            if name == "apollo":
+                # deterministic per-(leaf, epoch) random projector — O(mnr)
+                key = jax.random.fold_in(jax.random.key(seed + li),
+                                         step // update_gap)
+                proj_new_fn = lambda key=key, p=p, r=r, left=left: \
+                    _rand_projector(key, p, r, left)
+            else:
+                proj_new_fn = lambda g=g, r=r, left=left: _svd_projector(g, r, left)
+            # lax.cond: the O(m n²) SVD only *executes* on refresh steps.
+            proj = jax.lax.cond(refresh, proj_new_fn,
+                                lambda ls=ls: ls["proj"].astype(jnp.float32))
+            out["proj"] = proj
+
+            rlow = _down(g, proj, left)
+            rtilde, _, lr_mult, out["host"] = host.update(rlow, ls["host"], step)
+
+            if name == "galore":
+                delta = _up(rtilde, proj, left)
+            elif name == "fira":
+                main = _up(rtilde, proj, left)
+                resid = g.astype(jnp.float32) - _up(rlow, proj, left)
+                phi = (jnp.linalg.norm(rtilde) /
+                       jnp.maximum(jnp.linalg.norm(rlow), 1e-12))
+                delta = main + phi * resid
+            else:  # apollo: channel-wise scaling of the FULL-RANK gradient
+                axis = -2 if left else -1  # norm over the projected dim
+                snum = jnp.linalg.norm(rtilde, axis=axis, keepdims=True)
+                sden = jnp.maximum(jnp.linalg.norm(rlow, axis=axis, keepdims=True), 1e-12)
+                s = snum / sden  # (1,n) if left else (m,1): channel-wise
+                delta = g.astype(jnp.float32) * s
+                lr_mult = jnp.asarray(1.0, jnp.float32)
+
+            if use_limiter_flag and "prev_norm" in out:
+                delta, out["prev_norm"] = limiter.limit(delta, ls["prev_norm"], gamma)
+
+            q = p.astype(jnp.float32) - (lr_t * lr_mult * alpha) * delta.astype(jnp.float32)
+            new_p.append(q.astype(p.dtype))
+            new_s.append(out)
+        return (jax.tree_util.tree_unflatten(treedef, new_p),
+                {"step": step + 1, "leaves": tuple(new_s)})
+
+    return Optimizer(init, update)
+
+
+def galore(lr, rank: Optional[int] = None, rank_frac: float = 0.25,
+           alpha: float = 0.25, update_gap: int = 200,
+           eligible: Callable = None, state_dtype=jnp.float32) -> Optimizer:
+    return _make_lowrank("galore", lr, rank, rank_frac, alpha, update_gap,
+                         eligible, False, limiter.DEFAULT_GAMMA, 0, state_dtype)
+
+
+def apollo(lr, rank: Optional[int] = None, rank_frac: float = 0.25,
+           alpha: float = 1.0, update_gap: int = 200, seed: int = 0,
+           eligible: Callable = None, state_dtype=jnp.float32) -> Optimizer:
+    return _make_lowrank("apollo", lr, rank, rank_frac, alpha, update_gap,
+                         eligible, True, limiter.DEFAULT_GAMMA, seed, state_dtype)
+
+
+def fira(lr, rank: Optional[int] = None, rank_frac: float = 0.25,
+         alpha: float = 0.25, update_gap: int = 200,
+         eligible: Callable = None, state_dtype=jnp.float32) -> Optimizer:
+    return _make_lowrank("fira", lr, rank, rank_frac, alpha, update_gap,
+                         eligible, True, limiter.DEFAULT_GAMMA, 0, state_dtype)

@@ -1,0 +1,27 @@
+"""LR schedules. Paper: 10% linear warmup + cosine annealing to 10% of peak."""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax.numpy as jnp
+
+Schedule = Callable[[jnp.ndarray], jnp.ndarray]
+
+
+def constant(lr: float) -> Schedule:
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def warmup_cosine(peak_lr: float, total_steps: int, warmup_frac: float = 0.1,
+                  final_frac: float = 0.1) -> Schedule:
+    warmup_steps = max(1, int(total_steps * warmup_frac))
+
+    def sched(step):
+        step = step.astype(jnp.float32)
+        warm = step / warmup_steps
+        prog = jnp.clip((step - warmup_steps) / max(1, total_steps - warmup_steps), 0.0, 1.0)
+        cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return peak_lr * jnp.where(step < warmup_steps, warm, cos)
+
+    return sched

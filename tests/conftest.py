@@ -1,0 +1,11 @@
+"""Test fixtures.  NOTE: no XLA_FLAGS here — unit tests must see the real
+single CPU device; multi-device tests spawn subprocesses with their own
+XLA_FLAGS (see test_distributed.py)."""
+
+import jax
+import pytest
+
+
+@pytest.fixture(scope="session")
+def key():
+    return jax.random.key(0)

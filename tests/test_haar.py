@@ -1,0 +1,173 @@
+"""Unit + property tests for the Haar transform substrate (paper §III-A,
+Eq. (1)-(3)) and the theory of §III-C (Theorem 1)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import haar
+
+
+def rand(key, shape):
+    return jax.random.normal(jax.random.key(key), shape)
+
+
+@pytest.mark.parametrize("m,n,level", [(4, 8, 1), (8, 64, 2), (16, 128, 3),
+                                       (3, 256, 5), (2, 16, 4), (1, 2, 1)])
+def test_reconstruction_exact(m, n, level):
+    g = rand(0, (m, n))
+    a, ds = haar.haar_forward(g, level)
+    assert a.shape == (m, n >> level)
+    assert [d.shape[-1] for d in ds] == [n >> k for k in range(level, 0, -1)]
+    np.testing.assert_allclose(haar.haar_inverse(a, ds), g, atol=1e-5)
+
+
+@pytest.mark.parametrize("n,level", [(8, 1), (8, 2), (64, 3), (32, 5)])
+def test_matrix_equivalence_and_orthonormality(n, level):
+    """Butterfly == explicit H matrix (Eq. 2/3);  H Hᵀ = I."""
+    H = np.asarray(haar.haar_matrix(n, level))
+    np.testing.assert_allclose(H @ H.T, np.eye(n), atol=1e-6)
+    g = np.asarray(rand(1, (5, n)))
+    packed = haar.haar_forward_packed(jnp.asarray(g), level)
+    np.testing.assert_allclose(packed, g @ H, atol=1e-4)
+
+
+def test_level0_identity():
+    g = rand(2, (4, 16))
+    a, ds = haar.haar_forward(g, 0)
+    assert ds == []
+    np.testing.assert_allclose(a, g)
+
+
+def test_lowpass_is_block_mean():
+    g = rand(3, (6, 32))
+    pl = haar.lowpass(g, 3)
+    blocks = np.asarray(g).reshape(6, 4, 8)
+    expect = np.repeat(blocks.mean(-1, keepdims=True), 8, axis=-1)
+    np.testing.assert_allclose(pl, expect.reshape(6, 32), atol=1e-6)
+
+
+def test_approx_coeffs_are_scaled_block_means():
+    """A_l = block_mean · 2^{l/2} — ties Algorithm 1 to the §III-C operator."""
+    g = rand(4, (3, 64))
+    level = 3
+    a, _ = haar.haar_forward(g, level)
+    means = np.asarray(g).reshape(3, 8, 8).mean(-1)
+    np.testing.assert_allclose(a, means * 2 ** (level / 2), atol=1e-5)
+
+
+def test_invalid_level_raises():
+    with pytest.raises(ValueError):
+        haar.haar_forward(rand(0, (2, 12)), 3)  # 12 % 8 != 0
+
+
+# ---------------------------------------------------------------------------
+# Property-based (hypothesis)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(1, 6), st.integers(0, 4), st.integers(0, 1000))
+def test_parseval_energy_preserved(m, level, seed):
+    n = 16 << level
+    g = rand(seed, (m, n))
+    packed = haar.haar_forward_packed(g, level)
+    np.testing.assert_allclose(float(jnp.linalg.norm(packed)),
+                               float(jnp.linalg.norm(g)), rtol=1e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 3), st.integers(0, 1000), st.floats(0.1, 10.0),
+       st.floats(0.1, 10.0))
+def test_linearity(level, seed, ca, cb):
+    a = rand(seed, (4, 64))
+    b = rand(seed + 1, (4, 64))
+    lhs = haar.haar_forward_packed(ca * a + cb * b, level)
+    rhs = ca * haar.haar_forward_packed(a, level) \
+        + cb * haar.haar_forward_packed(b, level)
+    np.testing.assert_allclose(lhs, rhs, atol=1e-3)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 3), st.integers(0, 500))
+def test_theorem1_haar_lowpass_dominance(level, seed):
+    """Theorem 1: on column-smooth matrices (Assumption 1 satisfied),
+    ‖G − P_l(G)‖_F < inf_{rank≤r} ‖G − X‖_F with r = n/4."""
+    m = n = 64
+    b = 1 << level
+    rng = np.random.RandomState(seed)
+    # construct a column-smooth G: slowly varying columns + tiny jitter
+    base = rng.randn(m, 8) @ rng.randn(8, n)  # smooth low-dim structure
+    t = np.linspace(0, 1, n)
+    smooth = np.stack([np.sin(2 * np.pi * (f + 1) * t + rng.rand())
+                       for f in range(m)])
+    G = base * 0.1 + smooth + 0.5 * rng.randn(m, 1)  # row offsets (flat cols)
+    r = n // 4
+    sv = np.linalg.svd(G, compute_uv=False)
+    dG = np.diff(G, axis=1)
+    lhs_cond = np.linalg.norm(dG)
+    rhs_cond = np.sin(np.pi / b) * np.sqrt(r) * sv[r]
+    if lhs_cond >= rhs_cond:
+        return  # Assumption 1 not satisfied for this draw — vacuous case
+    err_haar = np.linalg.norm(G - np.asarray(haar.lowpass(jnp.asarray(G),
+                                                          level)))
+    err_rank = np.sqrt((sv[r:] ** 2).sum())
+    assert err_haar < err_rank + 1e-9
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(2, 4), st.integers(0, 100))
+def test_detail_scale_upsample_consistency(level, seed):
+    """Multi-level detail normalization == explicit per-band block repeat."""
+    scale = jnp.abs(rand(seed, (3, 8))) + 0.1  # A_l resolution (n=8·2^level)
+    for k in range(1, level + 1):
+        up = haar.detail_scale_upsample(scale, level, k)
+        assert up.shape[-1] == 8 * (1 << (level - k))
+        np.testing.assert_allclose(
+            up, np.repeat(np.asarray(scale), 1 << (level - k), axis=-1))
+
+
+# ---------------------------------------------------------------------------
+# db2 (Daubechies-4) — beyond-paper wavelet option
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("m,n,level", [(4, 32, 1), (8, 64, 2), (3, 128, 3)])
+def test_db2_reconstruction_and_parseval(m, n, level):
+    g = rand(7, (m, n))
+    a, ds = haar.db2_forward(g, level)
+    assert a.shape == (m, n >> level)
+    rec = haar.db2_inverse(a, ds)
+    np.testing.assert_allclose(np.asarray(rec), np.asarray(g), atol=1e-5)
+    e_in = float(jnp.sum(g ** 2))
+    e_out = float(jnp.sum(a ** 2) + sum(jnp.sum(d ** 2) for d in ds))
+    np.testing.assert_allclose(e_in, e_out, rtol=1e-5)
+
+
+def test_db2_smoother_on_smooth_signals():
+    """db2 concentrates more energy in the approximation band than Haar on
+    smooth signals (its raison d'être as a beyond-paper option)."""
+    t = np.linspace(0, 4 * np.pi, 256)
+    g = jnp.asarray(np.sin(t)[None, :].repeat(4, 0), jnp.float32)
+    a_h, _ = haar.haar_forward(g, 3)
+    a_d, _ = haar.db2_forward(g, 3)
+    e = float(jnp.sum(g ** 2))
+    frac_h = float(jnp.sum(a_h ** 2)) / e
+    frac_d = float(jnp.sum(a_d ** 2)) / e
+    assert frac_d >= frac_h - 1e-3, (frac_h, frac_d)
+
+
+def test_gwt_db2_optimizer_trains():
+    import jax as _jax
+    from repro import optim
+    def loss_fn(params):
+        return sum(jnp.sum((l - 0.5) ** 2) for l in _jax.tree.leaves(params))
+    from repro.optim.schedules import warmup_cosine
+    o = optim.make("gwt", lr=warmup_cosine(0.05, 40), level=2, wavelet="db2")
+    ps = {"mlp": {"w1": rand(3, (16, 32))}}
+    st = o.init(ps)
+    l0 = float(loss_fn(ps))
+    upd = _jax.jit(o.update)
+    for _ in range(40):
+        ps, st = upd(_jax.grad(loss_fn)(ps), st, ps)
+    assert float(loss_fn(ps)) < 0.9 * l0
