@@ -226,6 +226,21 @@ def kernels_bench(quick: bool):
     us_u = _time(jax.jit(unfused), g, ms, vs, n=20)
     emit("kernel/gwt_adam_unfused", us_u, f"fused_speedup={us_u/us_f:.2f}x")
 
+    # backend sweep through the portability layer: the same fused_update
+    # entry point the optimizer uses, per available impl on this platform
+    # ('pallas' only where supported — REPRO_KERNEL_IMPL / MeshContext
+    # route the same knob at launch time).
+    from repro.kernels.gwt_adam import ops as gops
+    impls = ["jnp", "interpret"]
+    if jax.default_backend() == "tpu":   # platform support, not the
+        impls.append("pallas")           # REPRO_KERNEL_IMPL override
+    st = {"m": ms, "v": vs}
+    for impl in impls:
+        us_i = _time(lambda gg, ss: gops.fused_update(
+            gg, ss, jnp.int32(1), level=level, impl=impl)[0], g, st,
+            n=5 if impl == "interpret" else 20)
+        emit(f"kernel/gwt_adam_impl_{impl}", us_i, f"{m}x{n} l{level}")
+
     # fusion HBM-traffic model (what matters on TPU): elements per grad el.
     l = level
     fused_traffic = 2 + 4 / 2 ** l

@@ -1,0 +1,33 @@
+#!/usr/bin/env bash
+# Single CI entry point: compat smoke-import check + the tier-1 suite.
+#
+#   ./scripts/verify.sh            # full tier-1
+#   ./scripts/verify.sh --smoke    # import check only (seconds)
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== compat smoke: import every repro module under the installed JAX =="
+python - <<'PY'
+import importlib, pathlib, sys
+src = pathlib.Path("src")
+mods = sorted(".".join(p.relative_to(src).with_suffix("").parts)
+              for p in src.rglob("*.py") if p.name != "__init__.py")
+failed = []
+for m in mods:
+    try:
+        importlib.import_module(m)
+    except Exception as e:  # noqa: BLE001 - report everything
+        failed.append((m, f"{type(e).__name__}: {e}"))
+for m, err in failed:
+    print(f"FAIL {m}: {err}")
+print(f"{len(mods) - len(failed)}/{len(mods)} modules import cleanly")
+sys.exit(1 if failed else 0)
+PY
+
+if [[ "${1:-}" == "--smoke" ]]; then
+    exit 0
+fi
+
+echo "== tier-1 test suite =="
+python -m pytest -x -q

@@ -11,7 +11,9 @@ Layout (one directory per step)::
   previous step serializes; a SIGTERM handler can force a final sync save.
 * ``restore`` takes an optional tree of NamedShardings and ``device_put``s
   each leaf — restoring under a *different mesh/topology than the save*
-  works by construction (elastic scaling).
+  works by construction (elastic scaling).  An optional ``ctx``
+  (MeshContext) activates the target mesh around the device_puts so
+  bare-spec shardings resolve on every supported JAX version.
 * ``gc_keep`` prunes old committed checkpoints.
 
 On a real multi-host pod each host writes only the shards it owns
@@ -30,6 +32,8 @@ from typing import Any, Optional
 
 import jax
 import numpy as np
+
+from repro import compat
 
 
 def _leaf_paths(tree):
@@ -108,9 +112,11 @@ class CheckpointManager:
 
     # -- restore -----------------------------------------------------------
     def restore(self, step: Optional[int], like: Any,
-                shardings: Any = None) -> Any:
+                shardings: Any = None, ctx: Any = None) -> Any:
         """Restore into the structure of ``like``; if ``shardings`` given,
-        leaves are device_put to them (mesh may differ from save time)."""
+        leaves are device_put to them (mesh may differ from save time).
+        ``ctx`` (a MeshContext) makes the target mesh ambient during the
+        device_puts."""
         if step is None:
             step = self.latest_step()
         if step is None:
@@ -125,14 +131,16 @@ class CheckpointManager:
             shardings, is_leaf=lambda x: x is None)
             if shardings is not None else [None] * len(flat))
         out = []
-        for i, (leaf, sh, lm) in enumerate(zip(flat, sflat, meta["leaves"])):
-            import jax.numpy as jnp
-            dt = jnp.dtype(lm["dtype"])
-            with open(os.path.join(d, f"arr_{i:06d}.bin"), "rb") as f:
-                arr = np.frombuffer(f.read(), dtype=dt).reshape(lm["shape"])
-            want = jnp.dtype(getattr(leaf, "dtype", arr.dtype))
-            if want != arr.dtype:
-                arr = arr.astype(want)
-            out.append(jax.device_put(arr, sh) if sh is not None
-                       else jax.device_put(arr))
+        with compat.use_mesh(compat.unwrap_mesh(ctx)):
+            for i, (leaf, sh, lm) in enumerate(zip(flat, sflat,
+                                                   meta["leaves"])):
+                import jax.numpy as jnp
+                dt = jnp.dtype(lm["dtype"])
+                with open(os.path.join(d, f"arr_{i:06d}.bin"), "rb") as f:
+                    arr = np.frombuffer(f.read(), dtype=dt).reshape(lm["shape"])
+                want = jnp.dtype(getattr(leaf, "dtype", arr.dtype))
+                if want != arr.dtype:
+                    arr = arr.astype(want)
+                out.append(jax.device_put(arr, sh) if sh is not None
+                           else jax.device_put(arr))
         return jax.tree_util.tree_unflatten(treedef, out), step

@@ -1,0 +1,247 @@
+"""Version-portability shim for the JAX mesh/sharding API surface.
+
+The reproduction targets the post-0.5 explicit-sharding API
+(``get_abstract_mesh``, ``AxisType``, ``make_mesh(..., axis_types=...)``,
+``set_mesh``/``use_mesh``) but must run unchanged on jax 0.4.x, which
+predates all of them.  Every symbol here is resolved by *feature
+detection* — probing the running JAX once at import — never by parsing
+version strings, so point-release backports and renames keep working.
+
+This module is the ONLY place in the repo allowed to touch those jax
+symbols directly (enforced by a grep test in tests/test_compat.py).
+
+Fallback semantics on older JAX:
+
+* ``use_mesh(mesh)``      -> enters the concrete ``Mesh`` context manager
+  (which makes bare-``PartitionSpec`` sharding constraints resolvable)
+  and tracks the mesh on a thread-local stack.
+* ``get_abstract_mesh()`` -> the stack top, else the thread-resources
+  physical mesh (set by a raw ``with mesh:``), else ``None``.
+* ``make_mesh``           -> drops ``axis_types`` (the older API has a
+  single implicit behaviour equivalent to auto axes under GSPMD).
+* ``with_sharding_constraint`` -> resolves bare specs against an explicit
+  or ambient mesh via ``NamedSharding`` and degrades to a no-op when no
+  mesh is available (CPU unit tests).
+
+The same module owns kernel-backend selection (``pallas`` / ``interpret``
+/ pure-``jnp``) so per-platform dispatch and the ``REPRO_KERNEL_IMPL``
+override live next to the rest of the runtime-portability decisions.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import enum
+import inspect
+import os
+import threading
+from typing import Optional, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+
+def _probe(obj, name: str):
+    """``getattr`` that treats jax's accelerated-deprecation
+    ``AttributeError``s (raised from module ``__getattr__``) as absent."""
+    try:
+        return getattr(obj, name, None)
+    except Exception:
+        return None
+
+
+# Feature flags — module-level so tests can monkeypatch each branch.
+_NATIVE_AXIS_TYPE = _probe(jax.sharding, "AxisType")
+_NATIVE_GET_ABSTRACT_MESH = _probe(jax.sharding, "get_abstract_mesh")
+_NATIVE_USE_MESH = _probe(jax.sharding, "use_mesh") or _probe(jax, "set_mesh")
+_NATIVE_MAKE_MESH = _probe(jax, "make_mesh")
+
+
+def _accepts_axis_types(fn) -> bool:
+    if fn is None:
+        return False
+    try:
+        return "axis_types" in inspect.signature(fn).parameters
+    except (TypeError, ValueError):
+        return False
+
+
+_MAKE_MESH_AXIS_TYPES = _accepts_axis_types(_NATIVE_MAKE_MESH)
+
+
+class _AxisTypeStub(enum.Enum):
+    """Stand-in for the post-0.5 axis-type enum: call sites can name axis
+    types symbolically even where the running JAX has no such concept."""
+    Auto = "auto"
+    Explicit = "explicit"
+    Manual = "manual"
+
+
+AxisType = _NATIVE_AXIS_TYPE if _NATIVE_AXIS_TYPE is not None else _AxisTypeStub
+
+
+def auto_axis_types(n: int):
+    """``n`` auto axis types — the only variant this codebase uses."""
+    return (AxisType.Auto,) * n
+
+
+# ---------------------------------------------------------------------------
+# Mesh construction
+# ---------------------------------------------------------------------------
+
+def make_mesh(axis_shapes: Sequence[int], axis_names: Sequence[str], *,
+              axis_types="auto", devices=None) -> Mesh:
+    """Portable ``make_mesh``: passes ``axis_types`` only where the running
+    JAX accepts it.  ``axis_types='auto'`` means all-auto (this repo's only
+    use); ``None`` skips the argument entirely."""
+    axis_shapes = tuple(axis_shapes)
+    axis_names = tuple(axis_names)
+    if axis_types == "auto":
+        axis_types = auto_axis_types(len(axis_names))
+    kw = {}
+    if devices is not None:
+        kw["devices"] = devices
+    if _NATIVE_MAKE_MESH is not None:
+        if _MAKE_MESH_AXIS_TYPES and axis_types is not None:
+            return _NATIVE_MAKE_MESH(axis_shapes, axis_names,
+                                     axis_types=axis_types, **kw)
+        return _NATIVE_MAKE_MESH(axis_shapes, axis_names, **kw)
+    from jax.experimental import mesh_utils
+    devs = mesh_utils.create_device_mesh(axis_shapes, devices=devices)
+    return Mesh(devs, axis_names)
+
+
+# ---------------------------------------------------------------------------
+# Ambient mesh: native abstract-mesh tracking where available, otherwise a
+# thread-local stack maintained by use_mesh().
+# ---------------------------------------------------------------------------
+
+_ambient = threading.local()
+
+
+def _stack():
+    if not hasattr(_ambient, "meshes"):
+        _ambient.meshes = []
+    return _ambient.meshes
+
+
+def get_abstract_mesh():
+    """The ambient mesh, or ``None`` when no mesh context is active.
+
+    Normalizes across versions: the native API returns an *empty* abstract
+    mesh when unset — callers here always get ``None`` for "no mesh"."""
+    if _NATIVE_GET_ABSTRACT_MESH is not None:
+        m = _NATIVE_GET_ABSTRACT_MESH()
+        if m is not None and tuple(getattr(m, "axis_names", ()) or ()):
+            return m
+        return None
+    st = _stack()
+    if st:
+        return st[-1]
+    try:  # a raw `with mesh:` (0.4.x resource env) also counts as ambient
+        from jax._src import mesh as _mesh_src
+        pm = _mesh_src.thread_resources.env.physical_mesh
+        if pm is not None and not pm.empty:
+            return pm
+    except Exception:
+        pass
+    return None
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Optional[Mesh]):
+    """Context manager making ``mesh`` ambient.  ``None`` is a no-op (the
+    single-device / CPU-unit-test case)."""
+    if mesh is None:
+        yield None
+        return
+    if _NATIVE_USE_MESH is not None:
+        with _NATIVE_USE_MESH(mesh):
+            yield mesh
+        return
+    st = _stack()
+    st.append(mesh)
+    try:
+        if hasattr(mesh, "__enter__"):  # 0.4.x: resolves bare PartitionSpecs
+            with mesh:
+                yield mesh
+        else:
+            yield mesh
+    finally:
+        st.pop()
+
+
+def unwrap_mesh(mesh_or_ctx):
+    """Accept a Mesh/AbstractMesh OR an object carrying one (MeshContext);
+    ``None`` passes through.  The single normalization point for APIs that
+    take either."""
+    return getattr(mesh_or_ctx, "mesh", mesh_or_ctx)
+
+
+def with_sharding_constraint(x, *spec, mesh=None):
+    """Sharding constraint that degrades to a no-op outside a mesh context.
+
+    Bare axis names (or a ready ``PartitionSpec``) are resolved against the
+    explicit ``mesh`` when given, else the ambient mesh.  A concrete mesh
+    resolves through ``NamedSharding`` (works on every version without any
+    ambient context); otherwise the bare spec is handed to jax, which the
+    post-0.5 abstract-mesh machinery resolves itself."""
+    if len(spec) == 1 and isinstance(spec[0], PartitionSpec):
+        sp = spec[0]
+    else:
+        sp = PartitionSpec(*spec)
+    m = mesh if mesh is not None else get_abstract_mesh()
+    try:
+        if isinstance(m, Mesh):
+            return jax.lax.with_sharding_constraint(x, NamedSharding(m, sp))
+        return jax.lax.with_sharding_constraint(x, sp)
+    except (ValueError, RuntimeError, TypeError):
+        return x
+
+
+# ---------------------------------------------------------------------------
+# Compiled-artifact introspection
+# ---------------------------------------------------------------------------
+
+def cost_analysis(compiled) -> dict:
+    """Normalized ``compiled.cost_analysis()``: newer jax returns a flat
+    dict, 0.4.x a one-element list of per-program dicts."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        return dict(cost[0]) if cost else {}
+    return dict(cost or {})
+
+
+# ---------------------------------------------------------------------------
+# Kernel backend selection
+# ---------------------------------------------------------------------------
+
+KERNEL_IMPLS = ("pallas", "interpret", "jnp")
+
+
+def default_kernel_impl(platform: Optional[str] = None) -> str:
+    """Per-platform default backend: native Pallas on TPU, the pure-jnp
+    butterfly elsewhere.  ``REPRO_KERNEL_IMPL`` overrides (e.g. set
+    ``interpret`` to validate the Pallas lowering on CPU)."""
+    env = os.environ.get("REPRO_KERNEL_IMPL", "").strip().lower()
+    if env and env != "auto":
+        if env not in KERNEL_IMPLS:  # fail fast: a typo here would
+            # otherwise silently fall back to a different backend
+            raise ValueError(
+                f"REPRO_KERNEL_IMPL={env!r} invalid; choices: auto|" +
+                "|".join(KERNEL_IMPLS))
+        return env
+    platform = platform or jax.default_backend()
+    return "pallas" if platform == "tpu" else "jnp"
+
+
+def resolve_kernel_impl(impl: Optional[str] = None,
+                        platform: Optional[str] = None) -> str:
+    """Map ``None``/``'auto'`` to the platform default; validate the rest."""
+    if impl in (None, "auto"):
+        return default_kernel_impl(platform)
+    if impl not in KERNEL_IMPLS:
+        raise ValueError(
+            f"unknown kernel impl {impl!r}; choices: auto|" +
+            "|".join(KERNEL_IMPLS))
+    return impl

@@ -15,8 +15,11 @@ Ineligible leaves (embeddings, lm-head, norms, 1-D) run plain Adam at the
 base lr — the paper's module-wise strategy.  ``level=0`` reduces exactly to
 the host optimizer (tested).
 
-``impl='pallas'`` routes eligible-leaf updates through the fused TPU kernel
-(`repro.kernels.gwt_adam`); ``'jnp'`` (default, CPU-safe) uses the butterfly.
+``impl`` selects the kernel backend: ``'pallas'`` routes eligible-leaf
+updates through the fused TPU kernel (`repro.kernels.gwt_adam`),
+``'interpret'`` validates that lowering on CPU, ``'jnp'`` uses the pure
+butterfly, and ``'auto'`` (default) resolves per platform via
+``repro.compat`` — launchers pass ``MeshContext.kernel_impl`` explicitly.
 """
 
 from __future__ import annotations
@@ -26,6 +29,7 @@ from typing import Callable, Dict, Optional
 import jax
 import jax.numpy as jnp
 
+from repro import compat
 from repro.core import haar, limiter
 from repro.optim import hosts as hosts_lib
 from repro.optim.base import Optimizer, default_eligible, flatten_with_paths
@@ -61,11 +65,12 @@ def gwt(lr: Schedule | float,
         weight_decay: float = 0.0,
         state_dtype=jnp.float32,
         wavelet: str = "haar",
-        impl: str = "jnp") -> Optimizer:
+        impl: str = "auto") -> Optimizer:
     """Build the GWT optimizer. ``host`` in {'adam','adam_mini','muon'};
     ``wavelet`` in {'haar' (paper), 'db2' (beyond-paper Daubechies-4)}."""
     if wavelet not in ("haar", "db2"):
         raise ValueError(f"unknown wavelet {wavelet!r}")
+    impl = compat.resolve_kernel_impl(impl)
     fwd = haar.haar_forward if wavelet == "haar" else haar.db2_forward
     inv = haar.haar_inverse if wavelet == "haar" else haar.db2_inverse
     if isinstance(lr, (int, float)):
@@ -120,10 +125,10 @@ def gwt(lr: Schedule | float,
                 eff_alpha = 1.0
             else:
                 gt = g if mode == _Mode.LAST else jnp.swapaxes(g, -1, -2)
-                if impl == "pallas" and h.name == "adam" and wavelet == "haar":
+                if impl != "jnp" and h.name == "adam" and wavelet == "haar":
                     from repro.kernels.gwt_adam import ops as gwt_ops  # lazy
                     g_tilde, lr_mult, out["host"] = gwt_ops.fused_update(
-                        gt, lstate["host"], step, level=level)
+                        gt, lstate["host"], step, level=level, impl=impl)
                 else:
                     g_tilde, lr_mult, out["host"] = _gwt_core(gt, lstate["host"], step)
                 if mode == _Mode.FIRST:

@@ -48,10 +48,13 @@ def make_compressed_grad_reducer(mesh, axis: str = "data", level: int = 2,
                                  detail_dtype=jnp.bfloat16):
     """Tree-wise reducer: local per-shard grads -> mean over the DP axis.
 
-    Expects grad leaves replicated over every mesh axis except ``axis``
-    (pure-DP layout).  Returns a jit-compatible callable.
+    ``mesh`` may be a concrete Mesh or a MeshContext.  Expects grad leaves
+    replicated over every mesh axis except ``axis`` (pure-DP layout).
+    Returns a jit-compatible callable.
     """
     from jax.experimental.shard_map import shard_map
+    from repro import compat
+    mesh = compat.unwrap_mesh(mesh)
 
     def reduce_tree(grads):
         def one(g):

@@ -22,6 +22,7 @@ from typing import Any, Dict, Optional, Sequence, Tuple, Union
 import jax
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro import compat
 from repro.models.layers import Axes
 
 Candidate = Union[str, Tuple[str, ...]]
@@ -29,6 +30,7 @@ Rules = Dict[str, Tuple[Candidate, ...]]
 
 
 def _dp_axes(mesh) -> Tuple[str, ...]:
+    mesh = compat.unwrap_mesh(mesh)
     return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
 
 
@@ -77,6 +79,7 @@ def _axis_size(mesh, cand: Candidate) -> int:
 
 
 def spec_for(shape: Sequence[int], axes: Axes, mesh, rules: Rules) -> P:
+    mesh = compat.unwrap_mesh(mesh)
     used = set()
     entries = []
     for size, name in zip(shape, axes.names):
@@ -101,6 +104,8 @@ def spec_for(shape: Sequence[int], axes: Axes, mesh, rules: Rules) -> P:
 
 def tree_shardings(abstract: Any, axes_tree: Any, mesh, rules: Rules):
     """Map (ShapeDtypeStruct tree, Axes tree) -> NamedSharding tree."""
+    mesh = compat.unwrap_mesh(mesh)
+
     def one(sds, ax):
         if ax is None:
             return NamedSharding(mesh, P())
@@ -117,6 +122,7 @@ def gwt_state_shardings(params_abstract, params_axes, mesh, rules: Rules,
                         level: int, eligible=None, host: str = "adam"):
     from repro.core.gwt import _Mode, _leaf_mode
     from repro.optim.base import default_eligible, flatten_with_paths
+    mesh = compat.unwrap_mesh(mesh)
 
     elig = eligible or default_eligible
     paths, pleaves, _ = flatten_with_paths(params_abstract)
@@ -153,6 +159,7 @@ def gwt_state_shardings(params_abstract, params_axes, mesh, rules: Rules,
 
 def batch_shardings(batch_abstract: Dict[str, Any], mesh):
     """Input shardings: batch dims over DP axes, everything else replicated."""
+    mesh = compat.unwrap_mesh(mesh)
     dp = _dp_axes(mesh)
     dp_size = math.prod(mesh.shape[a] for a in dp)
     out = {}

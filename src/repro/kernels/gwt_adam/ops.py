@@ -14,16 +14,12 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
+from repro import compat
 from repro.kernels.gwt_adam import kernel, ref
 
 
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
-
-
 def _tile_fn(impl: str, level: int, b1: float, b2: float, eps: float):
-    if impl == "auto":
-        impl = "pallas" if _on_tpu() else "jnp"
+    impl = compat.resolve_kernel_impl(impl)
     if impl == "pallas":
         return functools.partial(kernel.gwt_adam_tile, level=level, b1=b1,
                                  b2=b2, eps=eps)
@@ -34,12 +30,23 @@ def _tile_fn(impl: str, level: int, b1: float, b2: float, eps: float):
                              eps=eps)
 
 
-@functools.partial(jax.jit, static_argnames=("level", "b1", "b2", "eps", "impl"))
 def fused_update(g: jax.Array, state: dict, step: jax.Array, *,
                  level: int, b1: float = 0.9, b2: float = 0.999,
                  eps: float = 1e-6, impl: str = "auto"
                  ) -> Tuple[jax.Array, jax.Array, dict]:
-    """Returns ``(g_tilde, lr_mult, new_state)`` — drop-in for the jnp core."""
+    """Returns ``(g_tilde, lr_mult, new_state)`` — drop-in for the jnp core.
+
+    ``impl``: auto|pallas|interpret|jnp — 'auto' resolves per platform via
+    repro.compat (launchers pass MeshContext.kernel_impl explicitly).
+    Resolution happens OUTSIDE the jitted body: 'auto' as a static jit arg
+    would freeze the REPRO_KERNEL_IMPL env read into the trace cache."""
+    impl = compat.resolve_kernel_impl(impl)
+    return _fused_update(g, state, step, level=level, b1=b1, b2=b2, eps=eps,
+                         impl=impl)
+
+
+@functools.partial(jax.jit, static_argnames=("level", "b1", "b2", "eps", "impl"))
+def _fused_update(g, state, step, *, level, b1, b2, eps, impl):
     fn = _tile_fn(impl, level, b1, b2, eps)
     if g.ndim > 2:  # stacked scan leaves (L, m, n)
         lead = g.shape[:-2]

@@ -1,7 +1,16 @@
-"""Pure-jnp oracle for the fused GWT-Adam kernel (Algorithm 1 inner loop)."""
+"""Pure-jnp oracle for the fused GWT-Adam kernel (Algorithm 1 inner loop).
+
+Jitted as a whole so the oracle and the (whole-body-compiled) Pallas
+kernel see identical XLA fusion/contraction decisions: run eagerly, each
+op rounds separately and near-cancelling approximation coefficients can
+land one f32 ulp away from the kernel's — which the ``1/(√V+ε)`` detail
+scaling then amplifies across a bf16 rounding boundary (a single-element
+8192-magnitude mismatch at ~2^20 magnitudes).
+"""
 
 from __future__ import annotations
 
+import functools
 from typing import Tuple
 
 import jax
@@ -10,6 +19,7 @@ import jax.numpy as jnp
 from repro.core import haar
 
 
+@functools.partial(jax.jit, static_argnames=("level", "b1", "b2", "eps"))
 def gwt_adam_tile(g: jax.Array, m_st: jax.Array, v_st: jax.Array, *,
                   level: int, b1: float = 0.9, b2: float = 0.999,
                   eps: float = 1e-6) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
@@ -21,6 +31,9 @@ def gwt_adam_tile(g: jax.Array, m_st: jax.Array, v_st: jax.Array, *,
     a_t = m * inv_denom
     tilde_d = [d * haar.detail_scale_upsample(inv_denom, level, level - i)
                for i, d in enumerate(details)]
-    gt = haar.haar_inverse(a_t, tilde_d)
-    ssq = jnp.sum(gt * gt)[None, None]
-    return (gt.astype(g.dtype), m.astype(m_st.dtype), v.astype(v_st.dtype), ssq)
+    gt = haar.haar_inverse(a_t, tilde_d).astype(g.dtype)
+    # limiter norm partials over the ROUNDED output — the norm of the g̃
+    # actually emitted, matching the kernel's ssq_ref
+    gr = gt.astype(jnp.float32)
+    ssq = jnp.sum(gr * gr)[None, None]
+    return (gt, m.astype(m_st.dtype), v.astype(v_st.dtype), ssq)

@@ -1,7 +1,8 @@
 """jit'd public wrapper for the haar_dwt kernel with backend dispatch.
 
-On TPU the Pallas kernel runs natively; elsewhere (CPU container) we use
-``interpret=True`` for validation or fall back to the jnp oracle.
+Backend selection ('auto') routes through repro.compat — native Pallas on
+TPU, the jnp oracle elsewhere — and launchers pass an explicit impl from
+MeshContext.kernel_impl so benchmarks can sweep backends.
 """
 
 from __future__ import annotations
@@ -11,18 +12,20 @@ from typing import Sequence, Tuple
 
 import jax
 
+from repro import compat
 from repro.kernels.haar_dwt import kernel, ref
 
 
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
+def dwt(g: jax.Array, level: int, impl: str = "auto") -> Tuple[jax.Array, ...]:
+    """Forward multi-level DWT. ``impl``: auto|pallas|interpret|jnp.
+
+    'auto' resolves OUTSIDE the jitted body — as a static jit arg it would
+    freeze the REPRO_KERNEL_IMPL env read into the trace cache."""
+    return _dwt(g, level, compat.resolve_kernel_impl(impl))
 
 
 @functools.partial(jax.jit, static_argnames=("level", "impl"))
-def dwt(g: jax.Array, level: int, impl: str = "auto") -> Tuple[jax.Array, ...]:
-    """Forward multi-level DWT. ``impl``: auto|pallas|interpret|jnp."""
-    if impl == "auto":
-        impl = "pallas" if _on_tpu() else "jnp"
+def _dwt(g, level, impl):
     if impl == "pallas":
         return kernel.haar_dwt_fwd(g, level)
     if impl == "interpret":
@@ -30,10 +33,13 @@ def dwt(g: jax.Array, level: int, impl: str = "auto") -> Tuple[jax.Array, ...]:
     return ref.haar_dwt_fwd(g, level)
 
 
+def idwt(a: jax.Array, details: Sequence[jax.Array],
+         impl: str = "auto") -> jax.Array:
+    return _idwt(a, details, compat.resolve_kernel_impl(impl))
+
+
 @functools.partial(jax.jit, static_argnames=("impl",))
-def idwt(a: jax.Array, details: Sequence[jax.Array], impl: str = "auto") -> jax.Array:
-    if impl == "auto":
-        impl = "pallas" if _on_tpu() else "jnp"
+def _idwt(a, details, impl):
     if impl == "pallas":
         return kernel.haar_dwt_inv(a, details)
     if impl == "interpret":

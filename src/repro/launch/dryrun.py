@@ -1,5 +1,23 @@
 import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import sys
+
+
+def _jax_backend_uninitialized() -> bool:
+    """XLA reads XLA_FLAGS at first *backend init*, not at jax import —
+    so the fake-device request below is effective (and worth setting) any
+    time before that, and pure pollution after (it would only leak into
+    child-process environments, e.g. the test suite's subprocesses)."""
+    if "jax" not in sys.modules:
+        return True
+    try:
+        from jax._src import xla_bridge
+        return not xla_bridge._backends
+    except Exception:
+        return False
+
+
+if _jax_backend_uninitialized():
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 
 """Multi-pod dry-run (assignment deliverable e).
 
@@ -15,7 +33,6 @@ step function with explicit in/out shardings, ``.compile()``, and record
 
 import argparse
 import json
-import sys
 import time
 import traceback
 
@@ -23,11 +40,12 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro import configs
+from repro import compat, configs
 from repro.core.gwt import gwt as gwt_optimizer
 from repro.distributed import sharding as shr
 from repro.launch.mesh import make_production_mesh
 from repro.models import encdec, lm
+from repro.runtime.context import MeshContext
 
 
 def _decode_fill(shape):
@@ -37,8 +55,10 @@ def _decode_fill(shape):
 
 
 def build_cell(cfg, shape, mesh, *, gwt_level: int = 2, optimizer=None,
-               rules_override=None):
+               rules_override=None, ctx: MeshContext = None):
     """Returns (fn, args, in_shardings, out_shardings) ready to lower."""
+    if ctx is None:
+        ctx = MeshContext.create(mesh=mesh)
     is_encdec = cfg.arch_class == "encdec"
     mod = encdec if is_encdec else lm
     params_abs = mod.abstract_params(cfg)
@@ -56,7 +76,7 @@ def build_cell(cfg, shape, mesh, *, gwt_level: int = 2, optimizer=None,
                                          gwt_level)
         dp = mesh.shape["data"] * mesh.shape.get("pod", 1)
         accum = max(1, min(shape.accum_steps, shape.global_batch // dp))
-        fn = mod.make_train_step(cfg, opt, accum_steps=accum)
+        fn = mod.make_train_step(cfg, opt, accum_steps=accum, ctx=ctx)
         args = (params_abs, opt_abs, batch_abs)
         in_sh = (params_sh, opt_sh, batch_sh)
         out_sh = (params_sh, opt_sh, None)
@@ -65,7 +85,7 @@ def build_cell(cfg, shape, mesh, *, gwt_level: int = 2, optimizer=None,
     rules = rules_override or shr.decode_rules(mesh)
     params_sh = shr.tree_shardings(params_abs, params_axes, mesh, rules)
     if shape.kind == "prefill":
-        fn = mod.make_prefill_step(cfg)
+        fn = mod.make_prefill_step(cfg, ctx=ctx)
         return fn, (params_abs, batch_abs), (params_sh, batch_sh), None, {}
 
     # decode
@@ -78,7 +98,7 @@ def build_cell(cfg, shape, mesh, *, gwt_level: int = 2, optimizer=None,
         cache_abs = mod.abstract_cache(cfg, shape.global_batch, fill)
         cache_ax = mod.cache_axes(cfg)
     cache_sh = shr.tree_shardings(cache_abs, cache_ax, mesh, rules)
-    fn = mod.make_decode_step(cfg)
+    fn = mod.make_decode_step(cfg, ctx=ctx)
     args = (params_abs, cache_abs, batch_abs)
     in_sh = (params_sh, cache_sh, batch_sh)
     out_sh = (None, cache_sh)
@@ -94,14 +114,16 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
         return {"arch": arch, "shape": shape_name, "multi_pod": multi_pod,
                 "status": "skip", "reason": skip}
     mesh = make_production_mesh(multi_pod=multi_pod)
+    ctx = MeshContext.create(mesh=mesh)
     t0 = time.time()
     try:
         fn, args, in_sh, out_sh, meta = build_cell(cfg, shape, mesh,
-                                                   gwt_level=gwt_level)
+                                                   gwt_level=gwt_level,
+                                                   ctx=ctx)
         # donation: params+opt_state (train) / cache (decode) alias in place
         donate = (0, 1) if shape.kind == "train" \
             else ((1,) if shape.kind == "decode" else ())
-        with jax.set_mesh(mesh):
+        with ctx.activate():
             jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
                              donate_argnums=donate)
             lowered = jitted.lower(*args)
@@ -109,7 +131,7 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
             compiled = lowered.compile()
             t_compile = time.time() - t0 - t_lower
             mem = compiled.memory_analysis()
-            cost = compiled.cost_analysis()
+            cost = compat.cost_analysis(compiled)
             hlo = compiled.as_text()
     except Exception as e:
         return {"arch": arch, "shape": shape_name, "multi_pod": multi_pod,

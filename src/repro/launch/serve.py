@@ -17,6 +17,7 @@ import jax.numpy as jnp
 
 from repro import configs
 from repro.models import lm
+from repro.runtime.context import MeshContext
 
 
 def pad_cache(cache, max_len: int, window: int = 0):
@@ -43,10 +44,10 @@ def pad_cache(cache, max_len: int, window: int = 0):
 
 
 def generate(cfg, params, tokens, gen_len: int, greedy: bool = True,
-             key=None):
+             key=None, ctx: MeshContext = None):
     B, S = tokens.shape
-    prefill = jax.jit(lm.make_prefill_step(cfg))
-    decode = jax.jit(lm.make_decode_step(cfg))
+    prefill = jax.jit(lm.make_prefill_step(cfg, ctx=ctx))
+    decode = jax.jit(lm.make_decode_step(cfg, ctx=ctx))
     logits, cache = prefill(params, {"tokens": tokens})
     cache = pad_cache(cache, S + gen_len, window=cfg.window)
     out = []
@@ -66,7 +67,10 @@ def main(argv=None):
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--kernel-impl", default="auto",
+                    choices=["auto", "pallas", "interpret", "jnp"])
     args = ap.parse_args(argv)
+    ctx = MeshContext.create(kernel_impl=args.kernel_impl)
 
     cfg = (configs.get_smoke(args.arch) if args.smoke
            else configs.get_config(args.arch))
@@ -77,7 +81,7 @@ def main(argv=None):
     tokens = jax.random.randint(key, (args.batch, args.prompt_len), 0,
                                 cfg.vocab)
     t0 = time.time()
-    out = generate(cfg, params, tokens, args.gen)
+    out = generate(cfg, params, tokens, args.gen, ctx=ctx)
     dt = time.time() - t0
     print(f"generated {out.shape} in {dt:.2f}s "
           f"({args.batch * args.gen / dt:.1f} tok/s)")

@@ -21,6 +21,7 @@ import jax.numpy as jnp
 from repro import configs, optim
 from repro.checkpoint.manager import CheckpointManager
 from repro.data.pipeline import make_source
+from repro.launch.mesh import make_mesh_context
 from repro.models import encdec, lm
 from repro.optim.schedules import warmup_cosine
 from repro.runtime.fault_tolerance import TrainLoop
@@ -54,7 +55,29 @@ def main(argv=None):
     ap.add_argument("--ckpt-every", type=int, default=100)
     ap.add_argument("--resume", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--mesh", default="",
+                    help="elastic mesh, e.g. '4x2' over (data, model); "
+                         "empty = single device")
+    ap.add_argument("--kernel-impl", default="auto",
+                    choices=["auto", "pallas", "interpret", "jnp"],
+                    help="fused-kernel backend (auto: pallas on TPU, "
+                         "jnp elsewhere; REPRO_KERNEL_IMPL also works)")
     args = ap.parse_args(argv)
+
+    if args.mesh:
+        try:
+            shape = tuple(int(s) for s in args.mesh.lower().split("x"))
+        except ValueError:
+            ap.error(f"--mesh {args.mesh!r}: expected integers joined by "
+                     "'x', e.g. '8' or '4x2' or '2x4x2'")
+        if not 1 <= len(shape) <= 3:
+            ap.error(f"--mesh {args.mesh!r}: 1-3 axes supported "
+                     "((data), (data, model), (pod, data, model))")
+        axes = (("data",), ("data", "model"),
+                ("pod", "data", "model"))[len(shape) - 1]
+        ctx = make_mesh_context(shape, axes, kernel_impl=args.kernel_impl)
+    else:
+        ctx = make_mesh_context(kernel_impl=args.kernel_impl)
 
     cfg = (configs.get_smoke(args.arch) if args.smoke
            else configs.get_config(args.arch))
@@ -65,7 +88,8 @@ def main(argv=None):
 
     opt_kw = {}
     if args.optimizer == "gwt":
-        opt_kw = {"level": args.level, "alpha": args.alpha, "host": args.host}
+        opt_kw = {"level": args.level, "alpha": args.alpha, "host": args.host,
+                  "impl": ctx.kernel_impl}
     elif args.optimizer in ("galore", "apollo", "fira"):
         opt_kw = {"rank_frac": 0.25, "alpha": args.alpha}
     optimizer = make_optimizer(args.optimizer, args.lr, args.steps, **opt_kw)
@@ -92,19 +116,21 @@ def main(argv=None):
         source.batch = batch_with_enc  # type: ignore
 
     train_step = jax.jit(mod.make_train_step(cfg, optimizer,
-                                             accum_steps=args.accum))
+                                             accum_steps=args.accum,
+                                             ctx=ctx))
     ckpt = CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
     start = 0
     if args.resume and ckpt is not None and ckpt.latest_step() is not None:
         (state, start) = ckpt.restore(None, {"params": params,
-                                             "opt": opt_state})
+                                             "opt": opt_state}, ctx=ctx)
         params, opt_state = state["params"], state["opt"]
         print(f"resumed from step {start}")
 
     loop = TrainLoop(train_step, ckpt, source, ckpt_every=args.ckpt_every)
-    params, opt_state, losses = loop.run(params, opt_state,
-                                         start_step=start,
-                                         num_steps=args.steps)
+    with ctx.activate():
+        params, opt_state, losses = loop.run(params, opt_state,
+                                             start_step=start,
+                                             num_steps=args.steps)
     if losses:
         k = max(1, len(losses) // 10)
         print(f"final loss (mean of last {k}): "

@@ -19,6 +19,7 @@ from repro.models.layers import (Axes, Builder, cross_entropy, embed_apply,
                                  embed_init, logits_apply, mlp_apply,
                                  mlp_init, rms_norm)
 from repro.models.lm import _cache_maker, _stack, constrain_batch
+from repro.runtime.context import MeshContext
 
 
 def _xattn_init(b: Builder, cfg) -> dict:
@@ -94,7 +95,10 @@ def abstract_params(cfg):
     return _build(cfg, "abstract")
 
 
-def encode(cfg, params, enc_embeds: jax.Array) -> jax.Array:
+def encode(cfg, params, enc_embeds: jax.Array,
+           ctx: MeshContext = None) -> jax.Array:
+    if ctx is None:
+        ctx = MeshContext.ambient()
     B, S, _ = enc_embeds.shape
     positions = jnp.broadcast_to(jnp.arange(S), (B, S))
     cos, sin = rope_lib.rope_angles(positions, cfg.head_dim, cfg.rope_theta)
@@ -105,17 +109,21 @@ def encode(cfg, params, enc_embeds: jax.Array) -> jax.Array:
                                     mode="train", bidirectional=True)
         x = x + h
         h = rms_norm(x, bp["norm2"], cfg.norm_eps)
-        return constrain_batch(x + mlp_apply(bp["mlp"], h)), None
+        return constrain_batch(x + mlp_apply(bp["mlp"], h), ctx=ctx), None
 
     body_fn = jax.checkpoint(body) if cfg.remat else body
-    x0 = constrain_batch(enc_embeds.astype(jnp.dtype(cfg.dtype)))
+    x0 = constrain_batch(enc_embeds.astype(jnp.dtype(cfg.dtype)), ctx=ctx)
     x, _ = jax.lax.scan(body_fn, x0, params["encoder"])
     return rms_norm(x, params["enc_norm"], cfg.norm_eps)
 
 
-def decode_stack(cfg, params, tokens, enc_out, *, mode="train", caches=None):
+def decode_stack(cfg, params, tokens, enc_out, *, mode="train", caches=None,
+                 ctx: MeshContext = None):
+    if ctx is None:
+        ctx = MeshContext.ambient()
     B, S = tokens.shape
-    x = constrain_batch(embed_apply(params["embed"], tokens, cfg.d_model))
+    x = constrain_batch(embed_apply(params["embed"], tokens, cfg.d_model),
+                        ctx=ctx)
     pos = caches["pos"] if caches is not None else None
     if mode == "decode":
         positions = jnp.broadcast_to(pos, (B, S))
@@ -136,7 +144,7 @@ def decode_stack(cfg, params, tokens, enc_out, *, mode="train", caches=None):
             kv_cache=bc["cross"] if (bc is not None and mode == "decode") else None)
         x = x + h
         h = rms_norm(x, bp["norm2"], cfg.norm_eps)
-        x = constrain_batch(x + mlp_apply(bp["mlp"], h))
+        x = constrain_batch(x + mlp_apply(bp["mlp"], h), ctx=ctx)
         nc = {"self": new_self, "cross": new_cross} \
             if mode in ("prefill", "decode") else None
         return x, nc
@@ -156,22 +164,25 @@ def decode_stack(cfg, params, tokens, enc_out, *, mode="train", caches=None):
     return logits, new_caches
 
 
-def loss_fn(cfg, params, batch) -> jax.Array:
-    enc_out = encode(cfg, params, batch["enc_embeds"])
+def loss_fn(cfg, params, batch, ctx: MeshContext = None) -> jax.Array:
+    enc_out = encode(cfg, params, batch["enc_embeds"], ctx=ctx)
     logits, _ = decode_stack(cfg, params, batch["tokens"], enc_out,
-                             mode="train")
+                             mode="train", ctx=ctx)
     return cross_entropy(logits, batch["labels"])
 
 
-def make_train_step(cfg, optimizer, accum_steps: int = 1):
+def make_train_step(cfg, optimizer, accum_steps: int = 1,
+                    ctx: MeshContext = None):
     from repro.models.lm import microbatch_split
 
     def train_step(params, opt_state, batch):
-        micro = microbatch_split(batch, accum_steps)
+        c = ctx if ctx is not None else MeshContext.ambient()
+        micro = microbatch_split(batch, accum_steps, ctx=c)
 
         def accum_body(carry, mb):
             gsum, lsum = carry
-            l, g = jax.value_and_grad(lambda p: loss_fn(cfg, p, mb))(params)
+            l, g = jax.value_and_grad(
+                lambda p: loss_fn(cfg, p, mb, ctx=c))(params)
             return (jax.tree.map(lambda a, b: a + b.astype(jnp.float32),
                                  gsum, g), lsum + l), None
 
@@ -216,19 +227,19 @@ def cache_axes(cfg):
     return {"dec": dec, "pos": Axes(())}
 
 
-def make_decode_step(cfg):
+def make_decode_step(cfg, ctx: MeshContext = None):
     def decode_step(params, caches, batch):
         logits, new_caches = decode_stack(cfg, params, batch["tokens"],
                                           enc_out=None, mode="decode",
-                                          caches=caches)
+                                          caches=caches, ctx=ctx)
         return logits[:, -1], new_caches
     return decode_step
 
 
-def make_prefill_step(cfg):
+def make_prefill_step(cfg, ctx: MeshContext = None):
     def prefill_step(params, batch):
-        enc_out = encode(cfg, params, batch["enc_embeds"])
+        enc_out = encode(cfg, params, batch["enc_embeds"], ctx=ctx)
         logits, caches = decode_stack(cfg, params, batch["tokens"], enc_out,
-                                      mode="prefill")
+                                      mode="prefill", ctx=ctx)
         return logits[:, -1], caches
     return prefill_step

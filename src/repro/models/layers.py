@@ -14,6 +14,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import compat
+
 
 class Axes:
     """Logical-axis annotation; unregistered class ⇒ a pytree *leaf*."""
@@ -71,20 +73,13 @@ class Builder:
 # Norms / activations
 # ---------------------------------------------------------------------------
 
-def wsc(x, *spec):
-    """with_sharding_constraint that no-ops outside a mesh context."""
-    try:
-        return jax.lax.with_sharding_constraint(
-            x, jax.sharding.PartitionSpec(*spec))
-    except (ValueError, RuntimeError, TypeError):
-        return x
+def wsc(x, *spec, ctx=None):
+    """with_sharding_constraint that no-ops outside a mesh context.
 
-
-def mesh_axis_size(name: str) -> int:
-    mesh = jax.sharding.get_abstract_mesh()
-    if mesh is None or name not in (mesh.axis_names or ()):
-        return 0
-    return mesh.shape[name]
+    ``ctx`` (a MeshContext or mesh) pins the mesh explicitly; without it
+    the compat-shimmed ambient mesh is used (CPU unit-test fallback)."""
+    return compat.with_sharding_constraint(x, *spec,
+                                           mesh=compat.unwrap_mesh(ctx))
 
 
 def rms_norm(x: jax.Array, gamma: jax.Array, eps: float = 1e-6) -> jax.Array:

@@ -19,7 +19,9 @@ import jax.numpy as jnp
 
 from repro.models import blocks, rope as rope_lib
 from repro.models.layers import (Axes, Builder, cross_entropy, embed_apply,
-                                 embed_init, logits_apply, rms_norm, softcap)
+                                 embed_init, logits_apply, rms_norm, softcap,
+                                 wsc as _wsc)
+from repro.runtime.context import MeshContext
 
 AUX_COEF = 0.01  # MoE load-balance loss weight
 
@@ -153,16 +155,20 @@ def cache_axes(cfg, B: int = 1, max_len: int = 2):
 # ---------------------------------------------------------------------------
 
 def forward(cfg, params, tokens: jax.Array, *, mode: str = "train",
-            caches=None, mrope_positions=None
+            caches=None, mrope_positions=None, ctx: MeshContext = None
             ) -> Tuple[jax.Array, Optional[dict], jax.Array]:
-    """Returns (logits, new_caches, aux_loss)."""
+    """Returns (logits, new_caches, aux_loss).  ``ctx`` pins the mesh and
+    kernel backend explicitly; ``None`` adopts the ambient mesh (CPU unit
+    tests)."""
+    if ctx is None:
+        ctx = MeshContext.ambient()
     B, S = tokens.shape
     # SP residuals (see constrain_batch): measured a net LOSS on the 256-chip
     # dry-run (deepseek collective 34.8s -> 187s from involuntary resharding;
     # EXPERIMENTS.md §Perf hypothesis log) — opt-in only.
     seq_par = mode == "train" and os.environ.get("REPRO_SEQ_PARALLEL") == "1"
     x = constrain_batch(embed_apply(params["embed"], tokens, cfg.d_model),
-                        seq=seq_par)
+                        seq=seq_par, ctx=ctx)
     pos = caches["pos"] if caches is not None else None
 
     if mode == "decode":
@@ -195,7 +201,7 @@ def forward(cfg, params, tokens: jax.Array, *, mode: str = "train",
                 # (measured 28 GiB on Jamba's 8-layer period w/ 4 MoE blocks)
                 one_block = jax.checkpoint(one_block)
             x, nc, aux = one_block(pparams[f"b{i}"], x, c)
-            x = constrain_batch(x, seq=seq_par)
+            x = constrain_batch(x, seq=seq_par, ctx=ctx)
             new_pc[f"b{i}"] = nc
             aux_sum = aux_sum + aux
         return x, new_pc, aux_sum
@@ -285,41 +291,15 @@ def forward(cfg, params, tokens: jax.Array, *, mode: str = "train",
 # Steps
 # ---------------------------------------------------------------------------
 
-def loss_fn(cfg, params, batch) -> jax.Array:
+def loss_fn(cfg, params, batch, ctx: MeshContext = None) -> jax.Array:
     logits, _, aux = forward(cfg, params, batch["tokens"], mode="train",
-                             mrope_positions=batch.get("mrope_positions"))
+                             mrope_positions=batch.get("mrope_positions"),
+                             ctx=ctx)
     return cross_entropy(logits, batch["labels"]) + AUX_COEF * aux
 
 
-def _wsc(x, *spec):
-    """Sharding constraint that degrades to a no-op outside a mesh context
-    (CPU unit tests)."""
-    try:
-        return jax.lax.with_sharding_constraint(
-            x, jax.sharding.PartitionSpec(*spec))
-    except (ValueError, RuntimeError, TypeError):
-        return x
-
-
-def _dp_axes_for(nbatch: int):
-    """DP mesh axes that divide ``nbatch`` under the ambient mesh (or None).
-
-    Activation batch dims MUST be pinned explicitly: the FSDP-sharded
-    embedding table (embed dim over 'data') otherwise propagates
-    feature-over-data sharding into the stack and GSPMD settles on a
-    replicated batch (measured: full-batch dots on every device)."""
-    mesh = jax.sharding.get_abstract_mesh()
-    if mesh is None or not mesh.axis_names:
-        return None
-    for cand in (("pod", "data"), ("data",)):
-        if all(a in mesh.axis_names for a in cand):
-            import math as _m
-            if nbatch % _m.prod(mesh.shape[a] for a in cand) == 0:
-                return cand if len(cand) > 1 else cand[0]
-    return None
-
-
-def constrain_batch(x, bdim: int = 0, seq: bool = False, seq_dim: int = 1):
+def constrain_batch(x, bdim: int = 0, seq: bool = False, seq_dim: int = 1,
+                    ctx: MeshContext = None):
     """Pin the batch dim of an activation to the DP axes (no-op if absent).
 
     ``seq=True`` additionally shards the sequence dim over 'model'
@@ -328,23 +308,24 @@ def constrain_batch(x, bdim: int = 0, seq: bool = False, seq_dim: int = 1):
     are 16× smaller; XLA re-gathers at the next block's matmuls, turning
     the TP all-reduce into all-gather + reduce-scatter (same wire bytes).
     """
-    mesh = jax.sharding.get_abstract_mesh()
-    if mesh is None or not mesh.axis_names:
+    if ctx is None:
+        ctx = MeshContext.ambient()
+    if not ctx.axis_names:
         return x
-    dp = _dp_axes_for(x.shape[bdim])
+    dp = ctx.dp_axes(x.shape[bdim])
     spec = [None] * x.ndim
     if dp is not None:
         spec[bdim] = dp
-    if seq and "model" in mesh.axis_names \
-            and x.shape[seq_dim] % mesh.shape["model"] == 0:
+    if seq and ctx.has_axis("model") \
+            and x.shape[seq_dim] % ctx.axis_size("model") == 0:
         spec[seq_dim] = "model"
     if all(s is None for s in spec):
         return x
-    return _wsc(x, *spec)
+    return _wsc(x, *spec, ctx=ctx)
 
 
-def microbatch_split(batch: Dict[str, jax.Array], accum: int
-                     ) -> Dict[str, jax.Array]:
+def microbatch_split(batch: Dict[str, jax.Array], accum: int,
+                     ctx: MeshContext = None) -> Dict[str, jax.Array]:
     """Split the global batch into ``accum`` microbatches with a
     *shard-preserving* layout: ``(B,) -> (mb, accum) -> swap -> (accum, mb)``
     maps microbatch ``a``, row ``m`` to global row ``m·accum + a`` — each
@@ -357,16 +338,16 @@ def microbatch_split(batch: Dict[str, jax.Array], accum: int
         if k == "mrope_positions":                   # (3, B, S): batch dim 1
             mb = v.shape[1] // accum
             r = v.reshape(3, mb, accum, v.shape[2]).transpose(2, 0, 1, 3)
-            out[k] = _wsc(r, None, None, "data", None)  # (accum, 3, mb, S)
+            out[k] = _wsc(r, None, None, "data", None, ctx=ctx)  # (accum, 3, mb, S)
         else:                                        # (B, ...)
             mb = v.shape[0] // accum
             r = v.reshape(mb, accum, *v.shape[1:]).swapaxes(0, 1)
-            out[k] = _wsc(r, None, "data", *([None] * (v.ndim - 1)))
+            out[k] = _wsc(r, None, "data", *([None] * (v.ndim - 1)), ctx=ctx)
     return out
 
 
 def make_train_step(cfg, optimizer, accum_steps: int = 1,
-                    grad_shardings=None):
+                    grad_shardings=None, ctx: MeshContext = None):
     """Gradient-accumulated train step: ``batch`` is the GLOBAL batch; a
     shard-preserving reshape feeds a microbatch ``lax.scan``.
 
@@ -378,11 +359,15 @@ def make_train_step(cfg, optimizer, accum_steps: int = 1,
     """
 
     def train_step(params, opt_state, batch):
-        micro = microbatch_split(batch, accum_steps)
+        # resolve the ambient fallback at trace time, not build time: the
+        # launcher may build the step outside the mesh context and jit it in
+        c = ctx if ctx is not None else MeshContext.ambient()
+        micro = microbatch_split(batch, accum_steps, ctx=c)
 
         def accum_body(carry, mb):
             gsum, lsum = carry
-            l, g = jax.value_and_grad(lambda p: loss_fn(cfg, p, mb))(params)
+            l, g = jax.value_and_grad(
+                lambda p: loss_fn(cfg, p, mb, ctx=c))(params)
             if grad_shardings is not None:
                 g = jax.tree.map(jax.lax.with_sharding_constraint, g,
                                  grad_shardings)
@@ -401,19 +386,20 @@ def make_train_step(cfg, optimizer, accum_steps: int = 1,
     return train_step
 
 
-def make_prefill_step(cfg):
+def make_prefill_step(cfg, ctx: MeshContext = None):
     def prefill_step(params, batch):
         logits, caches, _ = forward(cfg, params, batch["tokens"],
                                     mode="prefill",
-                                    mrope_positions=batch.get("mrope_positions"))
+                                    mrope_positions=batch.get("mrope_positions"),
+                                    ctx=ctx)
         return logits[:, -1], caches
     return prefill_step
 
 
-def make_decode_step(cfg):
+def make_decode_step(cfg, ctx: MeshContext = None):
     def decode_step(params, caches, batch):
         logits, new_caches, _ = forward(
             cfg, params, batch["tokens"], mode="decode", caches=caches,
-            mrope_positions=batch.get("mrope_positions"))
+            mrope_positions=batch.get("mrope_positions"), ctx=ctx)
         return logits[:, -1], new_caches
     return decode_step

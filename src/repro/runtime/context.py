@@ -1,0 +1,88 @@
+"""Explicit mesh/runtime context threaded through the system.
+
+``MeshContext`` is created ONCE at launch (train / dryrun / serve) and
+passed explicitly through model apply, optimizer construction, sharding
+rules, gradient compression, and checkpoint restore.  It bundles the two
+runtime decisions that previously leaked through ambient globals:
+
+* **which mesh** activations/params are constrained against (``mesh``,
+  ``None`` = single device — every constraint becomes a no-op), and
+* **which kernel backend** the fused GWT/Haar ops dispatch to
+  (``kernel_impl``: ``pallas`` | ``interpret`` | ``jnp``, resolved from
+  ``'auto'`` per platform via :mod:`repro.compat`).
+
+Code not yet handed a context (CPU unit tests calling ``lm.forward``
+directly) falls back to :meth:`MeshContext.ambient`, which reads the
+compat-shimmed ambient mesh — the old implicit behaviour, now in exactly
+one place.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Tuple, Union
+
+from repro import compat
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshContext:
+    """Immutable carrier of the launch-time mesh + kernel-backend choice."""
+
+    mesh: object = None          # concrete Mesh, AbstractMesh, or None
+    kernel_impl: str = "jnp"     # resolved: pallas | interpret | jnp
+
+    # -- construction ------------------------------------------------------
+    @classmethod
+    def create(cls, mesh=None, kernel_impl: str = "auto") -> "MeshContext":
+        return cls(mesh=mesh,
+                   kernel_impl=compat.resolve_kernel_impl(kernel_impl))
+
+    @classmethod
+    def ambient(cls, kernel_impl: str = "auto") -> "MeshContext":
+        """Compat-shimmed fallback for call sites without an explicit
+        context: adopt whatever mesh is ambient (usually ``None``)."""
+        return cls.create(mesh=compat.get_abstract_mesh(),
+                          kernel_impl=kernel_impl)
+
+    # -- mesh introspection ------------------------------------------------
+    @property
+    def axis_names(self) -> Tuple[str, ...]:
+        if self.mesh is None:
+            return ()
+        return tuple(getattr(self.mesh, "axis_names", ()) or ())
+
+    def has_axis(self, name: str) -> bool:
+        return name in self.axis_names
+
+    def axis_size(self, name: str) -> int:
+        """Size of mesh axis ``name``; 0 when absent (no mesh / no axis)."""
+        if not self.has_axis(name):
+            return 0
+        return int(self.mesh.shape[name])
+
+    def dp_axes(self, nbatch: int) -> Optional[Union[str, Tuple[str, ...]]]:
+        """DP mesh axes that divide ``nbatch`` (or None).
+
+        Activation batch dims MUST be pinned explicitly: the FSDP-sharded
+        embedding table (embed dim over 'data') otherwise propagates
+        feature-over-data sharding into the stack and GSPMD settles on a
+        replicated batch (measured: full-batch dots on every device)."""
+        names = self.axis_names
+        if not names:
+            return None
+        for cand in (("pod", "data"), ("data",)):
+            if all(a in names for a in cand):
+                if nbatch % math.prod(self.axis_size(a) for a in cand) == 0:
+                    return cand if len(cand) > 1 else cand[0]
+        return None
+
+    # -- actions -----------------------------------------------------------
+    def activate(self):
+        """Context manager making ``mesh`` ambient (jit/lower under it)."""
+        return compat.use_mesh(self.mesh)
+
+    def constrain(self, x, *spec):
+        """Sharding constraint against THIS context's mesh (no-op if none)."""
+        return compat.with_sharding_constraint(x, *spec, mesh=self.mesh)

@@ -82,9 +82,9 @@ def test_restore_reshards_under_new_mesh(tmp_path):
         os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro import compat
         from repro.checkpoint.manager import CheckpointManager
-        mesh = jax.make_mesh((4, 2), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh = compat.make_mesh((4, 2), ("data", "model"))
         cm = CheckpointManager({str(tmp_path)!r})
         like = {{"w": jax.ShapeDtypeStruct((8, 8), jnp.float32)}}
         sh = {{"w": NamedSharding(mesh, P("data", "model"))}}
@@ -151,12 +151,12 @@ def test_wavelet_compressed_psum_close_to_exact():
         os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import PartitionSpec as P
+        from repro import compat
         from repro.distributed.compression import make_compressed_grad_reducer
-        mesh = jax.make_mesh((8,), ("data",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = compat.make_mesh((8,), ("data",))
         g = jax.random.normal(jax.random.key(0), (8, 16, 64))
         reducer = make_compressed_grad_reducer(mesh, level=2)
-        with jax.set_mesh(mesh):
+        with compat.use_mesh(mesh):
             out = jax.jit(reducer)({"w": g})["w"]
         exact = jnp.broadcast_to(g.mean(0, keepdims=True), g.shape)
         err = float(jnp.abs(out - exact).max())
