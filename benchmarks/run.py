@@ -250,6 +250,93 @@ def kernels_bench(quick: bool):
          f"el/el -> {unfused_traffic/fused_traffic:.2f}x bw win")
 
 
+# ---------------------------------------------------------------------------
+# Trace-size / compile-time: per-leaf loop vs bucketed engine.
+#
+# The payoff of the leaf-plan engine: the jitted update trace holds one scan
+# body per (rule, shape) bucket instead of one unrolled update graph per
+# leaf, so jaxpr equation count stays ~flat as layers are added while the
+# per-leaf loop grows linearly.  Writes BENCH_trace_cpu.json next to this
+# file (the ROADMAP multi-backend-sweep baseline).
+# ---------------------------------------------------------------------------
+
+def _layered_params(n_layers: int, d: int = 64, f: int = 128, vocab: int = 256):
+    k = jax.random.key(0)
+    p = {"embed": jax.random.normal(jax.random.fold_in(k, 999),
+                                    (vocab, d)) * 0.02,
+         "norm": jnp.ones((d,))}
+    for i in range(n_layers):
+        kk = jax.random.fold_in(k, i)
+        p[f"layer_{i:02d}"] = {
+            "attn": {"wq": jax.random.normal(jax.random.fold_in(kk, 0),
+                                             (d, d)) * 0.05,
+                     "wo": jax.random.normal(jax.random.fold_in(kk, 1),
+                                             (d, d)) * 0.05},
+            "mlp": {"w1": jax.random.normal(jax.random.fold_in(kk, 2),
+                                            (d, f)) * 0.05,
+                    "w2": jax.random.normal(jax.random.fold_in(kk, 3),
+                                            (f, d)) * 0.05}}
+    return p
+
+
+def _trace_cell(opt_name, kw, n_layers, impl=None):
+    """(jaxpr_eqns, lower+compile seconds) for one optimizer update step."""
+    from repro import optim
+    okw = dict(kw)
+    if impl is not None:
+        okw["impl"] = impl
+    opt = optim.make(opt_name, lr=1e-3, **okw)
+    params = _layered_params(n_layers)
+    grads = jax.tree.map(lambda p: p * 0.01, params)
+    st = opt.init(params)
+    eqns = len(jax.make_jaxpr(opt.update)(grads, st, params).eqns)
+    t0 = time.perf_counter()
+    jax.jit(opt.update).lower(grads, st, params).compile()
+    return eqns, time.perf_counter() - t0
+
+
+def trace_bench(quick: bool):
+    import json
+    import os
+    layer_counts = (2, 8) if quick else (2, 4, 8, 16)
+    out = {"layer_counts": list(layer_counts), "cells": {}}
+    for tag, name, kw, impls in [
+            ("gwt2", "gwt", {"level": 2}, ["jnp"] if quick
+             else ["jnp", "interpret"]),
+            ("adam", "adam", {}, [None])]:
+        for impl in impls:
+            itag = f"{tag}_{impl}" if impl else tag
+            for bucketed, btag in ((False, "perleaf"), (True, "bucketed")):
+                eqns_row, secs_row = [], []
+                for nl in layer_counts:
+                    eqns, secs = _trace_cell(name, dict(kw, bucketed=bucketed),
+                                             nl, impl)
+                    eqns_row.append(eqns)
+                    secs_row.append(round(secs, 3))
+                out["cells"][f"{itag}_{btag}"] = {"jaxpr_eqns": eqns_row,
+                                                 "compile_s": secs_row}
+                emit(f"trace/{itag}_{btag}_compile_us_L{layer_counts[-1]}",
+                     secs_row[-1] * 1e6,
+                     f"eqns={eqns_row} compile_s={secs_row}")
+    # growth check: bucketed eqn count must grow sublinearly in layer count
+    lo, hi = layer_counts[0], layer_counts[-1]
+    for cell, data in out["cells"].items():
+        if cell.endswith("bucketed"):
+            e = data["jaxpr_eqns"]
+            ratio = e[-1] / max(e[0], 1)
+            linear = hi / lo
+            emit(f"trace/{cell}_growth", 0.0,
+                 f"{ratio:.2f}x over {lo}->{hi} layers "
+                 f"(per-leaf would be ~{linear:.0f}x)")
+    # quick (CI smoke) runs don't overwrite the committed full baseline
+    path = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                        "BENCH_trace_cpu_quick.json" if quick
+                        else "BENCH_trace_cpu.json")
+    with open(path, "w") as f:
+        json.dump(out, f, indent=1)
+    emit("trace/json", 0.0, path)
+
+
 TABLES = {
     "table1": table1_memory,
     "table2": table2_pretrain,
@@ -258,6 +345,7 @@ TABLES = {
     "table11": table11_memory_estimate,
     "table12": table12_levels,
     "kernels": kernels_bench,
+    "trace": trace_bench,
 }
 
 

@@ -10,7 +10,7 @@ loss at a fraction of the optimizer-state memory (Table I / Fig. 1).
 import jax
 
 from repro import configs, optim
-from repro.core.gwt import state_memory_bytes
+from repro.optim.engine import state_bytes
 from repro.data.pipeline import make_source
 from repro.models import lm
 from repro.optim.schedules import warmup_cosine
@@ -31,9 +31,8 @@ def run(optimizer_name: str, **kw):
     step = jax.jit(lm.make_train_step(CFG, opt))
     loop = TrainLoop(step, None, data, log_every=20)
     _, _, losses = loop.run(params, opt_state, num_steps=STEPS)
-    level = kw.get("level", 0)
-    mem = state_memory_bytes(params, level)
-    return losses[-1], mem["total_bytes"] / 2**20
+    # exact per-optimizer accounting (eval_shape over the real init)
+    return losses[-1], state_bytes(opt, params) / 2**20
 
 
 if __name__ == "__main__":

@@ -29,5 +29,8 @@ if [[ "${1:-}" == "--smoke" ]]; then
     exit 0
 fi
 
+echo "== trace/compile benchmark smoke (bucketed engine vs per-leaf) =="
+python -m benchmarks.run --only trace --quick
+
 echo "== tier-1 test suite =="
 python -m pytest -x -q

@@ -36,6 +36,16 @@ import numpy as np
 from repro import compat
 
 
+class StructureMismatch(ValueError):
+    """Checkpoint layout does not match the requested ``like`` tree.
+
+    Raised (instead of silently reshaping) when leaf counts or shapes
+    disagree — e.g. restoring a legacy per-leaf tuple optimizer state into
+    the bucketed engine layout.  Callers catch this to run a migration
+    (see ``repro.launch.train``: restore with ``engine.legacy_like`` then
+    ``engine.migrate_legacy``)."""
+
+
 def _leaf_paths(tree):
     flat, treedef = jax.tree_util.tree_flatten(tree)
     return flat, treedef
@@ -63,6 +73,17 @@ class CheckpointManager:
     def latest_step(self) -> Optional[int]:
         steps = self.committed_steps()
         return steps[-1] if steps else None
+
+    def manifest(self, step: Optional[int] = None) -> dict:
+        """The saved manifest (tree structure string, leaf shapes/dtypes) —
+        lets callers inspect a checkpoint's layout before choosing a
+        ``like`` tree (e.g. legacy-vs-bucketed optimizer state)."""
+        if step is None:
+            step = self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no committed checkpoint in {self.dir}")
+        with open(os.path.join(self._step_dir(step), "manifest.json")) as f:
+            return json.load(f)
 
     # -- save --------------------------------------------------------------
     def _write(self, step: int, tree: Any):
@@ -125,8 +146,16 @@ class CheckpointManager:
         with open(os.path.join(d, "manifest.json")) as f:
             meta = json.load(f)
         flat, treedef = _leaf_paths(like)
-        assert len(flat) == len(meta["leaves"]), \
-            "checkpoint structure mismatch"
+        if len(flat) != len(meta["leaves"]):
+            raise StructureMismatch(
+                f"checkpoint step {step} has {len(meta['leaves'])} leaves, "
+                f"'like' tree has {len(flat)}")
+        for i, (leaf, lm) in enumerate(zip(flat, meta["leaves"])):
+            want_shape = tuple(getattr(leaf, "shape", lm["shape"]))
+            if want_shape != tuple(lm["shape"]):
+                raise StructureMismatch(
+                    f"leaf {i}: checkpoint shape {tuple(lm['shape'])} != "
+                    f"requested {want_shape}")
         sflat = (jax.tree_util.tree_leaves(
             shardings, is_leaf=lambda x: x is None)
             if shardings is not None else [None] * len(flat))

@@ -15,6 +15,11 @@ Ineligible leaves (embeddings, lm-head, norms, 1-D) run plain Adam at the
 base lr — the paper's module-wise strategy.  ``level=0`` reduces exactly to
 the host optimizer (tested).
 
+The per-leaf routing is declared as rules over the shared bucketed engine
+(``repro.optim.engine``): same-shaped eligible leaves are stacked into one
+``(L, m, n)`` bucket and — on the fused path — go through
+``kernels/gwt_adam/ops.fused_update`` in a **single** call per bucket.
+
 ``impl`` selects the kernel backend: ``'pallas'`` routes eligible-leaf
 updates through the fused TPU kernel (`repro.kernels.gwt_adam`),
 ``'interpret'`` validates that lowering on CPU, ``'jnp'`` uses the pure
@@ -24,6 +29,7 @@ butterfly, and ``'auto'`` (default) resolves per platform via
 
 from __future__ import annotations
 
+import functools
 from typing import Callable, Dict, Optional
 
 import jax
@@ -31,7 +37,7 @@ import jax.numpy as jnp
 
 from repro import compat
 from repro.core import haar, limiter
-from repro.optim import hosts as hosts_lib
+from repro.optim import engine, hosts as hosts_lib
 from repro.optim.base import Optimizer, default_eligible, flatten_with_paths
 from repro.optim.schedules import Schedule, constant
 
@@ -65,7 +71,8 @@ def gwt(lr: Schedule | float,
         weight_decay: float = 0.0,
         state_dtype=jnp.float32,
         wavelet: str = "haar",
-        impl: str = "auto") -> Optimizer:
+        impl: str = "auto",
+        bucketed: bool = True) -> Optimizer:
     """Build the GWT optimizer. ``host`` in {'adam','adam_mini','muon'};
     ``wavelet`` in {'haar' (paper), 'db2' (beyond-paper Daubechies-4)}."""
     if wavelet not in ("haar", "db2"):
@@ -82,23 +89,12 @@ def gwt(lr: Schedule | float,
     # for a MUON host (matches MUON-for-2D + Adam-for-rest practice).
     plain = hosts_lib.adam(state_dtype=state_dtype) if host == "muon" else h
     elig = eligible or default_eligible
-
-    def init(params):
-        paths, leaves, _ = flatten_with_paths(params)
-        leaf_states = []
-        for path, p in zip(paths, leaves):
-            mode = _leaf_mode(path, p, level, elig)
-            if mode == _Mode.PLAIN:
-                leaf_states.append({"host": plain.init(p)})
-            else:
-                g_shape = p.shape if mode == _Mode.LAST \
-                    else p.shape[:-2] + (p.shape[-1], p.shape[-2])
-                a_shape = g_shape[:-1] + (g_shape[-1] >> level,)
-                leaf_states.append({
-                    "host": h.init(jax.ShapeDtypeStruct(a_shape, state_dtype)),
-                    "prev_norm": jnp.zeros((), jnp.float32),
-                })
-        return {"step": jnp.zeros((), jnp.int32), "leaves": tuple(leaf_states)}
+    use_fused = impl != "jnp" and h.name == "adam" and wavelet == "haar"
+    # the fused kernel takes the Adam coefficients explicitly — mirror the
+    # host's (hosts.adam defaults), so host_kwargs overrides are honored on
+    # every backend, not just the jnp core
+    adam_kw = {k: host_kwargs.get(k, d)
+               for k, d in (("b1", 0.9), ("b2", 0.999), ("eps", 1e-6))}
 
     def _gwt_core(g, hstate, step):
         a, details = fwd(g, level)
@@ -111,66 +107,122 @@ def gwt(lr: Schedule | float,
         g_tilde = inv(precond_a, tilde_d)
         return g_tilde, lr_mult, hstate
 
-    def update(grads, state, params):
-        step = state["step"]
-        lr_t = lr(step)
-        paths, gleaves, treedef = flatten_with_paths(grads)
-        pleaves = jax.tree_util.tree_leaves(params)
-        new_params, new_states = [], []
-        for path, g, lstate, p in zip(paths, gleaves, state["leaves"], pleaves):
-            mode = _leaf_mode(path, p, level, elig)
-            out = dict(lstate)
-            if mode == _Mode.PLAIN:
-                delta, _, lr_mult, out["host"] = plain.update(g, lstate["host"], step)
-                eff_alpha = 1.0
-            else:
-                gt = g if mode == _Mode.LAST else jnp.swapaxes(g, -1, -2)
-                if impl != "jnp" and h.name == "adam" and wavelet == "haar":
-                    from repro.kernels.gwt_adam import ops as gwt_ops  # lazy
-                    g_tilde, lr_mult, out["host"] = gwt_ops.fused_update(
-                        gt, lstate["host"], step, level=level, impl=impl)
-                else:
-                    g_tilde, lr_mult, out["host"] = _gwt_core(gt, lstate["host"], step)
-                if mode == _Mode.FIRST:
-                    g_tilde = jnp.swapaxes(g_tilde, -1, -2)
-                if use_limiter:
-                    g_tilde, out["prev_norm"] = limiter.limit(
-                        g_tilde, lstate["prev_norm"], gamma)
-                delta = g_tilde
-                eff_alpha = alpha
-            step_size = (lr_t * lr_mult * eff_alpha).astype(jnp.float32)
-            new_p = p.astype(jnp.float32) - step_size * delta.astype(jnp.float32)
-            if weight_decay:
-                new_p = new_p - lr_t * weight_decay * p.astype(jnp.float32)
-            new_params.append(new_p.astype(p.dtype))
-            new_states.append(out)
-        return (jax.tree_util.tree_unflatten(treedef, new_params),
-                {"step": step + 1, "leaves": tuple(new_states)})
+    def _apply(p, delta, lr_t, lr_mult, eff_alpha):
+        step_size = (lr_t * lr_mult * eff_alpha).astype(jnp.float32)
+        new_p = p.astype(jnp.float32) - step_size * delta.astype(jnp.float32)
+        if weight_decay:
+            new_p = new_p - lr_t * weight_decay * p.astype(jnp.float32)
+        return new_p.astype(p.dtype)
 
-    return Optimizer(init, update)
+    # -- plain rule: host optimizer on the full tensor ----------------------
+    def plain_update(g, p, state, step, leaf_id):
+        delta, _, lr_mult, hstate = plain.update(g, state["host"], step)
+        return _apply(p, delta, lr(step), lr_mult, 1.0), {"host": hstate}
+
+    plain_rule = engine.LeafRule(
+        kind=_Mode.PLAIN, init=lambda p: {"host": plain.init(p)},
+        update=plain_update)
+
+    # -- GWT rules: DHT along axis -1 (LAST) or -2 (FIRST) ------------------
+    def make_gwt_rule(mode: str) -> engine.LeafRule:
+        swap = mode == _Mode.FIRST
+
+        def init(p):
+            g_shape = tuple(p.shape) if not swap \
+                else tuple(p.shape[:-2]) + (p.shape[-1], p.shape[-2])
+            a_shape = g_shape[:-1] + (g_shape[-1] >> level,)
+            return {"host": h.init(jax.ShapeDtypeStruct(a_shape, state_dtype)),
+                    "prev_norm": jnp.zeros((), jnp.float32)}
+
+        def core(g, hstate, step):
+            gt = jnp.swapaxes(g, -1, -2) if swap else g
+            if use_fused:
+                from repro.kernels.gwt_adam import ops as gwt_ops  # lazy
+                g_tilde, lr_mult, hstate = gwt_ops.fused_update(
+                    gt, hstate, step, level=level, impl=impl, **adam_kw)
+            else:
+                g_tilde, lr_mult, hstate = _gwt_core(gt, hstate, step)
+            if swap:
+                g_tilde = jnp.swapaxes(g_tilde, -1, -2)
+            return g_tilde, lr_mult, hstate
+
+        def update(g, p, state, step, leaf_id):
+            g_tilde, lr_mult, hstate = core(g, state["host"], step)
+            out = {"host": hstate, "prev_norm": state["prev_norm"]}
+            if use_limiter:
+                g_tilde, out["prev_norm"] = limiter.limit(
+                    g_tilde, state["prev_norm"], gamma)
+            return _apply(p, g_tilde, lr(step), lr_mult, alpha), out
+
+        def vector_update(g_stk, p_stk, state, step, leaf_ids):
+            # One fused-kernel launch for the whole (L, m, n) bucket; the
+            # limiter is per-leaf (one Frobenius norm each) via vmap.
+            g_tilde, lr_mult, hstate = core(g_stk, state["host"], step)
+            out = {"host": hstate, "prev_norm": state["prev_norm"]}
+            if use_limiter:
+                g_tilde, out["prev_norm"] = jax.vmap(
+                    functools.partial(limiter.limit, gamma=gamma))(
+                    g_tilde, state["prev_norm"])
+            return _apply(p_stk, g_tilde, lr(step), lr_mult, alpha), out
+
+        return engine.LeafRule(
+            kind=mode, init=init, update=update,
+            vector_update=vector_update if use_fused else None)
+
+    gwt_last = make_gwt_rule(_Mode.LAST)
+    gwt_first = make_gwt_rule(_Mode.FIRST)
+    rules = {_Mode.PLAIN: plain_rule, _Mode.LAST: gwt_last,
+             _Mode.FIRST: gwt_first}
+
+    return engine.build(
+        lambda path, leaf: rules[_leaf_mode(path, leaf, level, elig)],
+        bucketed=bucketed)
 
 
 # ---------------------------------------------------------------------------
 # Memory accounting (paper Table I / Table XI): optimizer-state bytes.
 # ---------------------------------------------------------------------------
 
+def _host_elements(shape, host: str) -> int:
+    """State elements a host keeps for one tensor of ``shape``: Adam 2× (M+V),
+    MUON 1× (momentum only), Adam-mini a full M plus one V per row."""
+    size = 1
+    for s in shape:
+        size *= s
+    if host == "muon":
+        return size
+    if host == "adam_mini":
+        rows = size // shape[-1] if len(shape) >= 2 else 1
+        return size + rows
+    return 2 * size
+
+
 def state_memory_bytes(params, level: int,
                        eligible: Callable[[str, jax.Array], bool] = None,
                        bytes_per_el: int = 2, host: str = "adam") -> Dict[str, int]:
-    """Optimizer-state memory: GWT leaves keep ``2·size/2^l`` elements
-    (M^R+V^R), plain leaves ``2·size`` (Adam M+V); MUON host keeps 1× not 2×.
+    """Analytic optimizer-state memory: GWT leaves keep host states on the
+    ``A_l`` band (``size/2^l`` elements), plain leaves host states on the
+    full tensor.  Host multiplier: Adam 2× (M+V), MUON 1× (M only; plain
+    leaves still run Adam), Adam-mini ``1× + 1/row`` (full M, per-row V).
+
+    For *exact* per-optimizer accounting use
+    ``repro.optim.engine.state_bytes(optimizer, params)``.
     """
     elig = eligible or default_eligible
-    per_state = 1 if host == "muon" else 2
     acc = {"gwt_bytes": 0, "plain_bytes": 0, "gwt_params": 0, "plain_params": 0}
+    plain_host = "adam" if host == "muon" else host
     paths, leaves, _ = flatten_with_paths(params)
     for path, p in zip(paths, leaves):
         mode = _leaf_mode(path, p, level, elig)
         if mode == _Mode.PLAIN:
-            acc["plain_bytes"] += 2 * p.size * bytes_per_el
+            acc["plain_bytes"] += _host_elements(tuple(p.shape),
+                                                 plain_host) * bytes_per_el
             acc["plain_params"] += p.size
         else:
-            acc["gwt_bytes"] += per_state * (p.size >> level) * bytes_per_el
+            width = (p.shape[-1] if mode == _Mode.LAST
+                     else p.shape[-2]) >> level
+            a_shape = (p.size // (width << level), width)
+            acc["gwt_bytes"] += _host_elements(a_shape, host) * bytes_per_el
             acc["gwt_params"] += p.size
     acc["total_bytes"] = acc["gwt_bytes"] + acc["plain_bytes"]
     return acc

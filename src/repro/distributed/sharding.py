@@ -115,46 +115,65 @@ def tree_shardings(abstract: Any, axes_tree: Any, mesh, rules: Rules):
 
 
 # ---------------------------------------------------------------------------
-# Optimizer-state shardings (mirrors repro.core.gwt leaf routing)
+# Optimizer-state shardings (mirrors the engine's bucketed leaf plan)
 # ---------------------------------------------------------------------------
+
+def _stacked(mesh, spec: P) -> NamedSharding:
+    """Per-leaf spec -> spec for the (L, ...) bucket stack: leading axis
+    (the stacked same-shape leaves) is replicated, like the 'layers' dim."""
+    return NamedSharding(mesh, P(*((None,) + tuple(spec))))
+
 
 def gwt_state_shardings(params_abstract, params_axes, mesh, rules: Rules,
                         level: int, eligible=None, host: str = "adam"):
-    from repro.core.gwt import _Mode, _leaf_mode
-    from repro.optim.base import default_eligible, flatten_with_paths
+    """NamedSharding tree for the GWT optimizer's bucketed state layout
+    ``{"step", "buckets": {name: {"host": ..., "prev_norm"?}}}``.
+
+    Each bucket stacks same-shape leaves.  The host moments get the spec
+    shared by *all* members' logical axes; when same-shape members resolve
+    to different specs (e.g. ``attn/wq`` ('embed','heads') vs ``attn/wo``
+    ('heads','embed') when ``H·hd == d`` — the engine buckets by shape
+    only), the bucket's state is replicated rather than mis-sharding half
+    the stack with a transposed partitioning."""
+    from repro.core.gwt import _Mode, gwt as gwt_optimizer
+    from repro.optim.base import flatten_with_paths
     mesh = compat.unwrap_mesh(mesh)
 
-    elig = eligible or default_eligible
-    paths, pleaves, _ = flatten_with_paths(params_abstract)
+    opt = gwt_optimizer(lr=0.0, level=level, host=host, eligible=eligible,
+                        impl="jnp")
+    plan = opt.engine.plan(params_abstract)
+    _, pleaves, _ = flatten_with_paths(params_abstract)
     aleaves = jax.tree.leaves(params_axes,
                               is_leaf=lambda x: isinstance(x, Axes))
     rep = NamedSharding(mesh, P())
-    leaf_shardings = []
-    for path, sds, ax in zip(paths, pleaves, aleaves):
-        mode = _leaf_mode(path, sds, level, elig)
-        if mode == _Mode.PLAIN:
-            sh = NamedSharding(mesh, spec_for(sds.shape, ax, mesh, rules))
-            host_sh = {"m": sh, "v": sh}
-            if host == "adam_mini":
-                host_sh["v"] = rep
-            if host == "muon":
-                host_sh = {"m": sh}
-            leaf_shardings.append({"host": host_sh})
+
+    def member_spec(kind: str, i: int) -> P:
+        sds, ax = pleaves[i], aleaves[i]
+        if kind == _Mode.PLAIN:
+            return spec_for(sds.shape, ax, mesh, rules)
+        if kind == _Mode.FIRST:
+            names = ax.names[:-2] + (ax.names[-1], ax.names[-2])
+            shape = sds.shape[:-2] + (sds.shape[-1], sds.shape[-2])
         else:
-            if mode == _Mode.FIRST:
-                names = ax.names[:-2] + (ax.names[-1], ax.names[-2])
-                shape = sds.shape[:-2] + (sds.shape[-1], sds.shape[-2])
-            else:
-                names, shape = ax.names, sds.shape
-            a_shape = shape[:-1] + (shape[-1] >> level,)
-            sh = NamedSharding(mesh, spec_for(a_shape, Axes(names), mesh, rules))
-            host_sh = {"m": sh, "v": sh}
-            if host == "adam_mini":
-                host_sh["v"] = rep
+            names, shape = ax.names, sds.shape
+        a_shape = shape[:-1] + (shape[-1] >> level,)
+        return spec_for(a_shape, Axes(names), mesh, rules)
+
+    bucket_shardings = {}
+    for b in plan.buckets:
+        specs = {member_spec(b.rule.kind, i) for i in b.indices}
+        sh = _stacked(mesh, specs.pop()) if len(specs) == 1 else rep
+        host_sh = {"m": sh, "v": sh}
+        if host == "adam_mini":
+            host_sh["v"] = rep
+        if b.rule.kind == _Mode.PLAIN:
+            # plain leaves run Adam under a MUON host (module-wise policy)
+            bucket_shardings[b.name] = {"host": host_sh}
+        else:
             if host == "muon":
                 host_sh = {"m": sh}
-            leaf_shardings.append({"host": host_sh, "prev_norm": rep})
-    return {"step": rep, "leaves": tuple(leaf_shardings)}
+            bucket_shardings[b.name] = {"host": host_sh, "prev_norm": rep}
+    return {"step": rep, "buckets": bucket_shardings}
 
 
 def batch_shardings(batch_abstract: Dict[str, Any], mesh):

@@ -1,9 +1,14 @@
 """jit'd wrapper for the fused GWT-Adam kernel, with backend dispatch and
-leading-batch handling (stacked ``(L, m, n)`` scan parameters are vmapped).
+leading-batch handling: any leading dims — stacked ``(L, m, n)`` scan
+parameters *and* the optimizer engine's shape buckets — are flattened and
+vmapped, so one call serves a whole bucket (one launch per bucket, not per
+leaf).
 
 ``fused_update`` is the entry point used by ``repro.core.gwt`` when
-``impl='pallas'``.  Semantics match ``repro.core.gwt._gwt_core`` exactly
-(tested leaf-by-leaf); the norm-growth limiter stays in the caller.
+``impl='pallas'`` (the GWT rules' ``vector_update``: the engine hands it
+the full ``(L, m, n)`` stack in a single call).  Semantics match
+``repro.core.gwt._gwt_core`` exactly (tested leaf-by-leaf); the
+norm-growth limiter stays in the caller (vmapped per leaf).
 """
 
 from __future__ import annotations

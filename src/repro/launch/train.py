@@ -95,11 +95,12 @@ def main(argv=None):
     optimizer = make_optimizer(args.optimizer, args.lr, args.steps, **opt_kw)
     opt_state = optimizer.init(params)
 
-    from repro.core.gwt import state_memory_bytes
-    mem = state_memory_bytes(params, args.level if args.optimizer == "gwt"
-                             else 0)
+    # Exact accounting for the *actual* optimizer/host (eval_shape over the
+    # real init — no Adam-shaped approximation for non-GWT runs).
+    from repro.optim.engine import state_bytes
+    mem_bytes = state_bytes(optimizer, params)
     print(f"arch={cfg.name} params={n_params/1e6:.1f}M "
-          f"optimizer={args.optimizer} opt_state≈{mem['total_bytes']/2**20:.1f}MiB")
+          f"optimizer={args.optimizer} opt_state={mem_bytes/2**20:.1f}MiB")
 
     source = make_source(args.data, cfg.vocab, args.seq, args.batch,
                          seed=args.seed)
@@ -121,8 +122,27 @@ def main(argv=None):
     ckpt = CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
     start = 0
     if args.resume and ckpt is not None and ckpt.latest_step() is not None:
-        (state, start) = ckpt.restore(None, {"params": params,
-                                             "opt": opt_state}, ctx=ctx)
+        from repro.checkpoint.manager import StructureMismatch
+        try:
+            (state, start) = ckpt.restore(None, {"params": params,
+                                                 "opt": opt_state}, ctx=ctx)
+        except StructureMismatch as e:
+            # Only a pre-engine checkpoint (per-leaf tuple optimizer state,
+            # "'leaves'" in its treedef) gets the migration path; a
+            # mismatching *bucketed* checkpoint means the optimizer/model
+            # config changed since the save — report that, don't guess.
+            if "'leaves'" not in ckpt.manifest().get("treedef", ""):
+                raise StructureMismatch(
+                    f"checkpoint in {ckpt.dir} is bucketed but does not "
+                    f"match this run's optimizer state — did --optimizer/"
+                    f"--level/--host or the model config change since it "
+                    f"was saved? ({e})") from e
+            legacy = optimizer.engine.legacy_like(params)
+            (state, start) = ckpt.restore(None, {"params": params,
+                                                 "opt": legacy}, ctx=ctx)
+            state["opt"] = optimizer.engine.migrate_legacy(state["opt"],
+                                                           params)
+            print("migrated legacy per-leaf optimizer state -> buckets")
         params, opt_state = state["params"], state["opt"]
         print(f"resumed from step {start}")
 

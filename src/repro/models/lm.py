@@ -2,7 +2,7 @@
 abstract via one Builder-driven code path), scan-over-periods stack,
 train / prefill / decode steps.
 
-The layer stack is ``lax.scan`` over *period groups* (DESIGN.md §2):
+The layer stack is ``lax.scan`` over *period groups* (DESIGN.md §6):
 compile time and HLO size are O(1) in depth; the roofline analyzer
 multiplies while-body costs by the trip count.
 """

@@ -1,7 +1,12 @@
-"""Optimizer registry. ``make('gwt', lr=..., level=3)`` etc."""
+"""Optimizer registry. ``make('gwt', lr=..., level=3)`` etc.
+
+Every registered optimizer is a thin rule declaration over the shared
+bucketed engine (``repro.optim.engine``); pass ``bucketed=False`` to any
+constructor for the unrolled per-leaf reference semantics.
+"""
 
 from repro.optim.base import Optimizer, default_eligible, global_norm
-from repro.optim import hosts, schedules
+from repro.optim import engine, hosts, schedules
 from repro.optim.standard import adam, adam_mini, muon, sgd, from_host
 from repro.optim.lowrank import galore, apollo, fira
 
@@ -19,4 +24,4 @@ def make(name: str, **kw) -> Optimizer:
 
 __all__ = ["Optimizer", "make", "adam", "adam_mini", "muon", "sgd", "galore",
            "apollo", "fira", "from_host", "default_eligible", "global_norm",
-           "hosts", "schedules"]
+           "engine", "hosts", "schedules"]

@@ -24,6 +24,10 @@ Grads = Any
 class Optimizer(NamedTuple):
     init: Callable[[Params], OptState]
     update: Callable[[Grads, OptState, Params], Tuple[Params, OptState]]
+    # Engine-built optimizers (repro.optim.engine) attach their Engine here:
+    # exposes plan()/legacy_like()/migrate_legacy() for checkpoint migration
+    # and per-bucket sharding.  None for hand-rolled optimizers.
+    engine: Any = None
 
 
 def path_str(path) -> str:
@@ -67,14 +71,17 @@ _DENY_SUBSTRINGS = ("embed", "lm_head", "norm", "scale", "bias", "pos_",
                     "router", "a_log", "dt_bias", "conv")
 
 
-def default_eligible(path: str, leaf: jax.Array, block: int = 1) -> bool:
-    """True if ``leaf`` should get subspace/wavelet-compressed states."""
+def default_eligible(path: str, leaf: jax.Array) -> bool:
+    """True if ``leaf`` should get subspace/wavelet-compressed states.
+
+    Pure name/rank policy — axis-divisibility by the transform block
+    (``2^level``) is the caller's job (``repro.core.gwt._leaf_mode``), so
+    eligibility and mode selection cannot disagree.
+    """
     lname = path.lower()
     if any(s in lname for s in _DENY_SUBSTRINGS):
         return False
-    if leaf.ndim < 2:
-        return False
-    return leaf.shape[-1] % block == 0 or leaf.shape[-2] % block == 0
+    return leaf.ndim >= 2
 
 
 def global_norm(tree) -> jax.Array:

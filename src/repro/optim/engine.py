@@ -1,0 +1,225 @@
+"""Leaf-plan + bucketed execution engine shared by all optimizer families.
+
+The module-wise strategy ("GWT on attention/MLP, Adam elsewhere") used to be
+re-implemented as an unrolled Python loop over pytree leaves in three places
+(``core/gwt.py``, ``optim/standard.py``, ``optim/lowrank.py``).  That bloats
+the jitted trace linearly with layer count and invokes the fused kernel once
+per leaf.  This engine replaces all three loops:
+
+1. **LeafPlan** — computed once per ``init``/``update`` trace from the param
+   *structure* (paths + shapes + dtypes only, so it is identical under
+   ``jax.eval_shape`` and inside ``jit``): every '/'-joined leaf path is
+   assigned a :class:`LeafRule` by the optimizer's ``assign`` function.
+
+2. **Buckets** — leaves with identical ``(rule.kind, rule.sig, shape,
+   dtype)`` are grouped.  E.g. all 12 ``layers/*/mlp/w1`` matrices of a
+   deep config become one ``(12, m, n)`` stack.  Bucket names are stable
+   and path-keyed — ``"<kind>__<first-leaf-path>"`` — so checkpoints
+   save/restore by name, not by flatten order.
+
+3. **Execution** — one ``jax.lax.scan`` over the stacked leading axis per
+   bucket (the scan body is traced *once* regardless of layer count), or a
+   single vectorized call when the rule provides ``vector_update`` (the
+   fused Pallas GWT-Adam kernel consumes the whole ``(L, m, n)`` stack in
+   one launch).
+
+State layout::
+
+    {"step": i32[],
+     "buckets": {"<kind>__<path>": <stacked per-leaf state pytree>, ...}}
+
+The per-leaf state inside a bucket is exactly what the pre-engine
+optimizers stored per leaf, so migration from the legacy
+``{"step", "leaves": (...,)}`` tuple layout is a pure regrouping
+(:meth:`Engine.migrate_legacy` / :meth:`Engine.to_legacy`).
+
+Custom rules: pass any ``assign(path, leaf) -> LeafRule`` to :func:`build`
+(see DESIGN.md and the README rule table).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.base import Optimizer, flatten_with_paths
+
+
+class LeafRule(NamedTuple):
+    """How one leaf updates.
+
+    * ``kind`` — rule family name (``plain`` / ``gwt_last`` / ``gwt_first``
+      / ``lowrank`` / ``sgd`` / ``muon`` / custom); becomes the bucket-name
+      prefix.
+    * ``sig`` — extra static signature: leaves bucket together only when
+      their ``(kind, sig, shape, dtype)`` all match.  Hyperparameters that
+      vary *between leaves of one optimizer* must be in ``sig``.
+    * ``init(leaf) -> state`` — per-leaf state pytree (arrays only) from an
+      array or ``ShapeDtypeStruct``.
+    * ``update(g, p, state, step, leaf_id) -> (new_p, new_state)`` — one
+      leaf's update.  ``leaf_id`` is the i32 flatten-order index (used e.g.
+      by APOLLO's per-leaf random projector).
+    * ``vector_update`` — optional ``(g_stk, p_stk, state_stk, step,
+      leaf_ids) -> (new_p_stk, new_state_stk)`` over the whole ``(L, ...)``
+      stack in one call; used instead of the scan when present (fused
+      kernels).
+    """
+
+    kind: str
+    init: Callable[[Any], Any]
+    update: Callable[..., Tuple[jax.Array, Any]]
+    sig: Tuple = ()
+    vector_update: Optional[Callable[..., Tuple[jax.Array, Any]]] = None
+
+
+class Bucket(NamedTuple):
+    name: str
+    rule: LeafRule
+    indices: Tuple[int, ...]   # positions in flatten order
+    paths: Tuple[str, ...]
+
+
+class LeafPlan(NamedTuple):
+    buckets: Tuple[Bucket, ...]
+    paths: Tuple[str, ...]
+    n_leaves: int
+
+
+def build_plan(assign: Callable[[str, Any], LeafRule], params) -> LeafPlan:
+    """Group leaves into buckets of identical ``(kind, sig, shape, dtype)``.
+
+    Depends only on paths/shapes/dtypes — safe to recompute at trace time.
+    """
+    paths, leaves, _ = flatten_with_paths(params)
+    groups: dict = {}
+    for i, (path, leaf) in enumerate(zip(paths, leaves)):
+        rule = assign(path, leaf)
+        key = (rule.kind, rule.sig, tuple(leaf.shape), str(jnp.dtype(leaf.dtype)))
+        if key in groups:
+            groups[key][1].append(i)
+        else:
+            groups[key] = (rule, [i])
+    buckets = []
+    for rule, idxs in sorted(groups.values(), key=lambda g: g[1][0]):
+        first = paths[idxs[0]].replace("/", ".")
+        buckets.append(Bucket(name=f"{rule.kind}__{first}", rule=rule,
+                              indices=tuple(idxs),
+                              paths=tuple(paths[i] for i in idxs)))
+    return LeafPlan(tuple(buckets), tuple(paths), len(paths))
+
+
+def _stack_states(per_leaf: Sequence[Any]):
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *per_leaf)
+
+
+def _slice_state(state, j: int):
+    return jax.tree_util.tree_map(lambda a: a[j], state)
+
+
+class Engine:
+    """Plan/migration companion of an engine-built :class:`Optimizer`."""
+
+    def __init__(self, assign: Callable[[str, Any], LeafRule],
+                 bucketed: bool = True):
+        self.assign = assign
+        self.bucketed = bucketed
+
+    def plan(self, params) -> LeafPlan:
+        return build_plan(self.assign, params)
+
+    # -- legacy tuple-layout interop ---------------------------------------
+    def legacy_like(self, params):
+        """Abstract state in the pre-engine layout ``{"step", "leaves"}``
+        (per-leaf states as a flatten-order tuple) — used as the ``like``
+        tree when restoring an old checkpoint.  ShapeDtypeStruct leaves:
+        no allocation."""
+        def build(p):
+            paths, leaves, _ = flatten_with_paths(p)
+            per_leaf = tuple(self.assign(pa, l).init(l)
+                             for pa, l in zip(paths, leaves))
+            return {"step": jnp.zeros((), jnp.int32), "leaves": per_leaf}
+        return jax.eval_shape(build, params)
+
+    def migrate_legacy(self, old_state, params):
+        """Regroup a legacy ``{"step", "leaves": (...,)}`` state into the
+        named bucket layout (values are untouched, only stacked)."""
+        plan = self.plan(params)
+        leaves = old_state["leaves"]
+        buckets = {b.name: _stack_states([leaves[i] for i in b.indices])
+                   for b in plan.buckets}
+        return {"step": old_state["step"], "buckets": buckets}
+
+    def to_legacy(self, state, params):
+        """Inverse of :meth:`migrate_legacy` (downgrade path / tests)."""
+        plan = self.plan(params)
+        per_leaf = [None] * plan.n_leaves
+        for b in plan.buckets:
+            st = state["buckets"][b.name]
+            for j, i in enumerate(b.indices):
+                per_leaf[i] = _slice_state(st, j)
+        return {"step": state["step"], "leaves": tuple(per_leaf)}
+
+
+def build(assign: Callable[[str, Any], LeafRule],
+          bucketed: bool = True) -> Optimizer:
+    """Build an :class:`Optimizer` from a leaf-rule assignment.
+
+    ``bucketed=True`` (default) executes one scan / vectorized kernel call
+    per bucket; ``bucketed=False`` unrolls leaf-by-leaf (the pre-engine
+    reference semantics — same state layout, used in equivalence tests).
+    """
+    eng = Engine(assign, bucketed)
+
+    def init(params):
+        plan = eng.plan(params)
+        _, leaves, _ = flatten_with_paths(params)
+        buckets = {
+            b.name: _stack_states([b.rule.init(leaves[i]) for i in b.indices])
+            for b in plan.buckets}
+        return {"step": jnp.zeros((), jnp.int32), "buckets": buckets}
+
+    def update(grads, state, params):
+        step = state["step"]
+        plan = eng.plan(params)
+        _, gleaves, treedef = flatten_with_paths(grads)
+        pleaves = jax.tree_util.tree_leaves(params)
+        new_leaves = [None] * plan.n_leaves
+        new_buckets = {}
+        for b in plan.buckets:
+            st = state["buckets"][b.name]
+            lids = jnp.asarray(b.indices, jnp.int32)
+            if not bucketed:
+                outs = [b.rule.update(gleaves[i], pleaves[i],
+                                      _slice_state(st, j), step, lids[j])
+                        for j, i in enumerate(b.indices)]
+                np_stk = jnp.stack([o[0] for o in outs])
+                ns = _stack_states([o[1] for o in outs])
+            else:
+                g_stk = jnp.stack([gleaves[i] for i in b.indices])
+                p_stk = jnp.stack([pleaves[i] for i in b.indices])
+                if b.rule.vector_update is not None:
+                    np_stk, ns = b.rule.vector_update(g_stk, p_stk, st, step,
+                                                      lids)
+                else:
+                    def body(_, xs, rule=b.rule):
+                        g, p, s, lid = xs
+                        return None, rule.update(g, p, s, step, lid)
+                    _, (np_stk, ns) = jax.lax.scan(
+                        body, None, (g_stk, p_stk, st, lids))
+            new_buckets[b.name] = ns
+            for j, i in enumerate(b.indices):
+                new_leaves[i] = np_stk[j]
+        return (jax.tree_util.tree_unflatten(treedef, new_leaves),
+                {"step": step + 1, "buckets": new_buckets})
+
+    return Optimizer(init, update, engine=eng)
+
+
+def state_bytes(optimizer: Optimizer, params) -> int:
+    """Exact optimizer-state bytes via ``eval_shape`` — no analytic model,
+    correct for every host/rule combination (train.py's accounting)."""
+    abstract = jax.eval_shape(optimizer.init, params)
+    return sum(l.size * jnp.dtype(l.dtype).itemsize
+               for l in jax.tree_util.tree_leaves(abstract))

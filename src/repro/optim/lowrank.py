@@ -9,6 +9,10 @@
 All share the per-leaf routing of GWT: eligible ≥2-D weights get compressed
 states, the rest run plain Adam.  ``rank_frac`` (e.g. 1/4, 1/8) matches the
 paper's GaLore-1/4 / GaLore-1/8 naming: ``r = rank_frac · min(m, n)``.
+
+Declared as rules over the shared bucketed engine: same-shaped leaves stack
+into one ``(L, m, n)`` bucket whose update (including the ``lax.cond``-gated
+SVD refresh) is traced once inside a ``lax.scan`` body.
 """
 
 from __future__ import annotations
@@ -19,8 +23,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import limiter
-from repro.optim import hosts as hosts_lib
-from repro.optim.base import Optimizer, default_eligible, flatten_with_paths
+from repro.optim import engine, hosts as hosts_lib
+from repro.optim.base import Optimizer, default_eligible
 from repro.optim.schedules import Schedule, constant
 
 
@@ -65,7 +69,8 @@ def _make_lowrank(name: str,
                   lr, rank, rank_frac, alpha, update_gap,
                   eligible, use_limiter_flag, gamma,
                   seed: int, state_dtype,
-                  b1=0.9, b2=0.999, eps=1e-6) -> Optimizer:
+                  b1=0.9, b2=0.999, eps=1e-6,
+                  bucketed: bool = True) -> Optimizer:
     lr = _norm_lr(lr)
     host = hosts_lib.adam(b1, b2, eps, state_dtype)
     elig = eligible or default_eligible
@@ -73,104 +78,104 @@ def _make_lowrank(name: str,
     def leaf_is_lowrank(path, p):
         return elig(path, p) and p.ndim >= 2 and min(p.shape[-2:]) >= 2
 
-    def init(params):
-        paths, leaves, _ = flatten_with_paths(params)
-        states = []
-        for i, (path, p) in enumerate(zip(paths, leaves)):
-            if not leaf_is_lowrank(path, p):
-                states.append({"host": host.init(p)})
-                continue
-            r = _rank(p, rank, rank_frac)
-            left = _project_left(p)
-            m = p.shape[-2] if left else p.shape[-1]
-            low_shape = (p.shape[:-2] + (r, p.shape[-1])) if left \
-                else (p.shape[:-2] + (p.shape[-2], r))
-            st = {"host": host.init(jax.ShapeDtypeStruct(low_shape, state_dtype)),
-                  "proj": jnp.zeros(p.shape[:-2] + (m, r), jnp.float32)}
-            if name in ("fira", "apollo"):
-                st["prev_norm"] = jnp.zeros((), jnp.float32)
-            states.append(st)
-        return {"step": jnp.zeros((), jnp.int32), "leaves": tuple(states)}
+    # -- plain rule: host Adam on the full tensor ---------------------------
+    def plain_update(g, p, state, step, leaf_id):
+        precond, _, lr_mult, hstate = host.update(g, state["host"], step)
+        q = p.astype(jnp.float32) - (lr(step) * lr_mult) * precond.astype(jnp.float32)
+        return q.astype(p.dtype), {"host": hstate}
 
-    def update(grads, state, params):
-        step = state["step"]
+    plain_rule = engine.LeafRule(
+        kind="plain", init=lambda p: {"host": host.init(p)},
+        update=plain_update)
+
+    # -- low-rank rule ------------------------------------------------------
+    def lowrank_init(p):
+        r = _rank(p, rank, rank_frac)
+        left = _project_left(p)
+        m = p.shape[-2] if left else p.shape[-1]
+        low_shape = (tuple(p.shape[:-2]) + (r, p.shape[-1])) if left \
+            else (tuple(p.shape[:-2]) + (p.shape[-2], r))
+        st = {"host": host.init(jax.ShapeDtypeStruct(low_shape, state_dtype)),
+              "proj": jnp.zeros(tuple(p.shape[:-2]) + (m, r), jnp.float32)}
+        if name in ("fira", "apollo"):
+            st["prev_norm"] = jnp.zeros((), jnp.float32)
+        return st
+
+    def lowrank_update(g, p, state, step, leaf_id):
+        out = dict(state)
         lr_t = lr(step)
-        paths, gleaves, treedef = flatten_with_paths(grads)
-        pleaves = jax.tree_util.tree_leaves(params)
-        new_p, new_s = [], []
-        for li, (path, g, ls, p) in enumerate(
-                zip(paths, gleaves, state["leaves"], pleaves)):
-            out = dict(ls)
-            if not leaf_is_lowrank(path, p):
-                precond, _, lr_mult, out["host"] = host.update(g, ls["host"], step)
-                q = p.astype(jnp.float32) - (lr_t * lr_mult) * precond.astype(jnp.float32)
-                new_p.append(q.astype(p.dtype))
-                new_s.append(out)
-                continue
+        r = _rank(p, rank, rank_frac)
+        left = _project_left(p)
+        refresh = (step % update_gap) == 0
+        if name == "apollo":
+            # deterministic per-(leaf, epoch) random projector — O(mnr)
+            key = jax.random.fold_in(jax.random.key(seed + leaf_id),
+                                     step // update_gap)
+            proj_new_fn = lambda: _rand_projector(key, p, r, left)
+        else:
+            proj_new_fn = lambda: _svd_projector(g, r, left)
+        # lax.cond: the O(m n²) SVD only *executes* on refresh steps.
+        proj = jax.lax.cond(refresh, proj_new_fn,
+                            lambda: state["proj"].astype(jnp.float32))
+        out["proj"] = proj
 
-            r = _rank(p, rank, rank_frac)
-            left = _project_left(p)
-            refresh = (step % update_gap) == 0
-            if name == "apollo":
-                # deterministic per-(leaf, epoch) random projector — O(mnr)
-                key = jax.random.fold_in(jax.random.key(seed + li),
-                                         step // update_gap)
-                proj_new_fn = lambda key=key, p=p, r=r, left=left: \
-                    _rand_projector(key, p, r, left)
-            else:
-                proj_new_fn = lambda g=g, r=r, left=left: _svd_projector(g, r, left)
-            # lax.cond: the O(m n²) SVD only *executes* on refresh steps.
-            proj = jax.lax.cond(refresh, proj_new_fn,
-                                lambda ls=ls: ls["proj"].astype(jnp.float32))
-            out["proj"] = proj
+        rlow = _down(g, proj, left)
+        rtilde, _, lr_mult, out["host"] = host.update(rlow, state["host"], step)
 
-            rlow = _down(g, proj, left)
-            rtilde, _, lr_mult, out["host"] = host.update(rlow, ls["host"], step)
+        if name == "galore":
+            delta = _up(rtilde, proj, left)
+        elif name == "fira":
+            main = _up(rtilde, proj, left)
+            resid = g.astype(jnp.float32) - _up(rlow, proj, left)
+            phi = (jnp.linalg.norm(rtilde) /
+                   jnp.maximum(jnp.linalg.norm(rlow), 1e-12))
+            delta = main + phi * resid
+        else:  # apollo: channel-wise scaling of the FULL-RANK gradient
+            axis = -2 if left else -1  # norm over the projected dim
+            snum = jnp.linalg.norm(rtilde, axis=axis, keepdims=True)
+            sden = jnp.maximum(jnp.linalg.norm(rlow, axis=axis, keepdims=True), 1e-12)
+            s = snum / sden  # (1,n) if left else (m,1): channel-wise
+            delta = g.astype(jnp.float32) * s
+            lr_mult = jnp.asarray(1.0, jnp.float32)
 
-            if name == "galore":
-                delta = _up(rtilde, proj, left)
-            elif name == "fira":
-                main = _up(rtilde, proj, left)
-                resid = g.astype(jnp.float32) - _up(rlow, proj, left)
-                phi = (jnp.linalg.norm(rtilde) /
-                       jnp.maximum(jnp.linalg.norm(rlow), 1e-12))
-                delta = main + phi * resid
-            else:  # apollo: channel-wise scaling of the FULL-RANK gradient
-                axis = -2 if left else -1  # norm over the projected dim
-                snum = jnp.linalg.norm(rtilde, axis=axis, keepdims=True)
-                sden = jnp.maximum(jnp.linalg.norm(rlow, axis=axis, keepdims=True), 1e-12)
-                s = snum / sden  # (1,n) if left else (m,1): channel-wise
-                delta = g.astype(jnp.float32) * s
-                lr_mult = jnp.asarray(1.0, jnp.float32)
+        if use_limiter_flag and "prev_norm" in out:
+            delta, out["prev_norm"] = limiter.limit(delta, state["prev_norm"],
+                                                    gamma)
 
-            if use_limiter_flag and "prev_norm" in out:
-                delta, out["prev_norm"] = limiter.limit(delta, ls["prev_norm"], gamma)
+        q = p.astype(jnp.float32) - (lr_t * lr_mult * alpha) * delta.astype(jnp.float32)
+        return q.astype(p.dtype), out
 
-            q = p.astype(jnp.float32) - (lr_t * lr_mult * alpha) * delta.astype(jnp.float32)
-            new_p.append(q.astype(p.dtype))
-            new_s.append(out)
-        return (jax.tree_util.tree_unflatten(treedef, new_p),
-                {"step": step + 1, "leaves": tuple(new_s)})
+    lowrank_rule = engine.LeafRule(kind=name, init=lowrank_init,
+                                   update=lowrank_update)
 
-    return Optimizer(init, update)
+    return engine.build(
+        lambda path, leaf: (lowrank_rule if leaf_is_lowrank(path, leaf)
+                            else plain_rule),
+        bucketed=bucketed)
 
 
 def galore(lr, rank: Optional[int] = None, rank_frac: float = 0.25,
            alpha: float = 0.25, update_gap: int = 200,
-           eligible: Callable = None, state_dtype=jnp.float32) -> Optimizer:
+           eligible: Callable = None, state_dtype=jnp.float32,
+           bucketed: bool = True) -> Optimizer:
     return _make_lowrank("galore", lr, rank, rank_frac, alpha, update_gap,
-                         eligible, False, limiter.DEFAULT_GAMMA, 0, state_dtype)
+                         eligible, False, limiter.DEFAULT_GAMMA, 0,
+                         state_dtype, bucketed=bucketed)
 
 
 def apollo(lr, rank: Optional[int] = None, rank_frac: float = 0.25,
            alpha: float = 1.0, update_gap: int = 200, seed: int = 0,
-           eligible: Callable = None, state_dtype=jnp.float32) -> Optimizer:
+           eligible: Callable = None, state_dtype=jnp.float32,
+           bucketed: bool = True) -> Optimizer:
     return _make_lowrank("apollo", lr, rank, rank_frac, alpha, update_gap,
-                         eligible, True, limiter.DEFAULT_GAMMA, seed, state_dtype)
+                         eligible, True, limiter.DEFAULT_GAMMA, seed,
+                         state_dtype, bucketed=bucketed)
 
 
 def fira(lr, rank: Optional[int] = None, rank_frac: float = 0.25,
          alpha: float = 0.25, update_gap: int = 200,
-         eligible: Callable = None, state_dtype=jnp.float32) -> Optimizer:
+         eligible: Callable = None, state_dtype=jnp.float32,
+         bucketed: bool = True) -> Optimizer:
     return _make_lowrank("fira", lr, rank, rank_frac, alpha, update_gap,
-                         eligible, True, limiter.DEFAULT_GAMMA, 0, state_dtype)
+                         eligible, True, limiter.DEFAULT_GAMMA, 0,
+                         state_dtype, bucketed=bucketed)

@@ -3,17 +3,20 @@
 These are the paper's full-rank baselines (Table II "Full-Rank Adam",
 "MUON"; Fig. 4 hosts).  Same ``Optimizer`` interface as GWT/GaLore/APOLLO so
 examples/benchmarks can swap them by name.
+
+All are thin rule declarations over the shared bucketed engine
+(``repro.optim.engine``): same-shaped leaves are stacked and updated by one
+``lax.scan`` body instead of one unrolled update graph per leaf.
 """
 
 from __future__ import annotations
 
 from typing import Optional
 
-import jax
 import jax.numpy as jnp
 
-from repro.optim import hosts as hosts_lib
-from repro.optim.base import Optimizer, flatten_with_paths
+from repro.optim import engine, hosts as hosts_lib
+from repro.optim.base import Optimizer
 from repro.optim.schedules import Schedule, constant
 
 
@@ -21,102 +24,72 @@ def _norm_lr(lr):
     return constant(lr) if isinstance(lr, (int, float)) else lr
 
 
-def from_host(lr: Schedule | float, host: hosts_lib.Host,
-              weight_decay: float = 0.0) -> Optimizer:
-    lr = _norm_lr(lr)
+def host_rule(kind: str, host: hosts_lib.Host, lr: Schedule,
+              weight_decay: float = 0.0) -> engine.LeafRule:
+    """Plain host update on the full tensor: ``p -= lr·lr_mult·precond``."""
 
-    def init(params):
-        _, leaves, _ = flatten_with_paths(params)
-        return {"step": jnp.zeros((), jnp.int32),
-                "leaves": tuple(host.init(p) for p in leaves)}
-
-    def update(grads, state, params):
-        step = state["step"]
+    def update(g, p, state, step, leaf_id):
         lr_t = lr(step)
-        _, gleaves, treedef = flatten_with_paths(grads)
-        pleaves = jax.tree_util.tree_leaves(params)
-        new_p, new_s = [], []
-        for g, ls, p in zip(gleaves, state["leaves"], pleaves):
-            precond, _, lr_mult, ls = host.update(g, ls, step)
-            q = p.astype(jnp.float32) - (lr_t * lr_mult) * precond.astype(jnp.float32)
-            if weight_decay:
-                q = q - lr_t * weight_decay * p.astype(jnp.float32)
-            new_p.append(q.astype(p.dtype))
-            new_s.append(ls)
-        return (jax.tree_util.tree_unflatten(treedef, new_p),
-                {"step": step + 1, "leaves": tuple(new_s)})
+        precond, _, lr_mult, state = host.update(g, state, step)
+        q = p.astype(jnp.float32) - (lr_t * lr_mult) * precond.astype(jnp.float32)
+        if weight_decay:
+            q = q - lr_t * weight_decay * p.astype(jnp.float32)
+        return q.astype(p.dtype), state
 
-    return Optimizer(init, update)
+    return engine.LeafRule(kind=kind, init=host.init, update=update)
+
+
+def from_host(lr: Schedule | float, host: hosts_lib.Host,
+              weight_decay: float = 0.0, bucketed: bool = True) -> Optimizer:
+    rule = host_rule(host.name, host, _norm_lr(lr), weight_decay)
+    return engine.build(lambda path, leaf: rule, bucketed=bucketed)
 
 
 def adam(lr, b1=0.9, b2=0.999, eps=1e-6, weight_decay=0.0,
-         state_dtype=jnp.float32) -> Optimizer:
-    return from_host(lr, hosts_lib.adam(b1, b2, eps, state_dtype), weight_decay)
+         state_dtype=jnp.float32, bucketed: bool = True) -> Optimizer:
+    return from_host(lr, hosts_lib.adam(b1, b2, eps, state_dtype),
+                     weight_decay, bucketed)
 
 
 def adam_mini(lr, b1=0.9, b2=0.999, eps=1e-6, weight_decay=0.0,
-              state_dtype=jnp.float32) -> Optimizer:
-    return from_host(lr, hosts_lib.adam_mini(b1, b2, eps, state_dtype), weight_decay)
+              state_dtype=jnp.float32, bucketed: bool = True) -> Optimizer:
+    return from_host(lr, hosts_lib.adam_mini(b1, b2, eps, state_dtype),
+                     weight_decay, bucketed)
 
 
-def sgd(lr, momentum: float = 0.9, state_dtype=jnp.float32) -> Optimizer:
+def sgd(lr, momentum: float = 0.9, state_dtype=jnp.float32,
+        bucketed: bool = True) -> Optimizer:
     lr = _norm_lr(lr)
 
-    def init(params):
-        _, leaves, _ = flatten_with_paths(params)
-        return {"step": jnp.zeros((), jnp.int32),
-                "leaves": tuple(jnp.zeros(p.shape, state_dtype) for p in leaves)}
-
-    def update(grads, state, params):
-        step = state["step"]
+    def update(g, p, m, step, leaf_id):
         lr_t = lr(step)
-        _, gleaves, treedef = flatten_with_paths(grads)
-        pleaves = jax.tree_util.tree_leaves(params)
-        new_p, new_s = [], []
-        for g, m, p in zip(gleaves, state["leaves"], pleaves):
-            m = momentum * m.astype(jnp.float32) + g.astype(jnp.float32)
-            new_p.append((p.astype(jnp.float32) - lr_t * m).astype(p.dtype))
-            new_s.append(m.astype(m.dtype))
-        return (jax.tree_util.tree_unflatten(treedef, new_p),
-                {"step": step + 1, "leaves": tuple(new_s)})
+        m = momentum * m.astype(jnp.float32) + g.astype(jnp.float32)
+        new_p = (p.astype(jnp.float32) - lr_t * m).astype(p.dtype)
+        return new_p, m.astype(state_dtype)
 
-    return Optimizer(init, update)
+    rule = engine.LeafRule(
+        kind="sgd", init=lambda p: jnp.zeros(p.shape, state_dtype),
+        update=update)
+    return engine.build(lambda path, leaf: rule, bucketed=bucketed)
 
 
 def muon(lr, beta=0.95, ns_steps=5, adam_lr: Optional[float] = None,
-         state_dtype=jnp.float32) -> Optimizer:
+         state_dtype=jnp.float32, bucketed: bool = True) -> Optimizer:
     """MUON on ≥2-D matmul weights, Adam on the rest — embeddings/heads/
     norms excluded per standard MUON practice (orthogonalizing the
     embedding matrix diverges)."""
     from repro.optim.base import default_eligible
     lr = _norm_lr(lr)
-    mh = hosts_lib.muon(beta, ns_steps, state_dtype=state_dtype)
-    ah = hosts_lib.adam(state_dtype=state_dtype)
     adam_sched = _norm_lr(adam_lr) if adam_lr is not None else lr
+    muon_r = host_rule("muon", hosts_lib.muon(beta, ns_steps,
+                                              state_dtype=state_dtype), lr)
+    adam_r = host_rule("plain", hosts_lib.adam(state_dtype=state_dtype),
+                       adam_sched)
 
     def is_muon(path, p):
         return (p.ndim >= 2 and min(p.shape[-2:]) > 1
                 and default_eligible(path, p))
 
-    def init(params):
-        paths, leaves, _ = flatten_with_paths(params)
-        return {"step": jnp.zeros((), jnp.int32),
-                "leaves": tuple((mh if is_muon(pa, p) else ah).init(p)
-                                for pa, p in zip(paths, leaves))}
-
-    def update(grads, state, params):
-        step = state["step"]
-        paths, gleaves, treedef = flatten_with_paths(grads)
-        pleaves = jax.tree_util.tree_leaves(params)
-        new_p, new_s = [], []
-        for pa, g, ls, p in zip(paths, gleaves, state["leaves"], pleaves):
-            host = mh if is_muon(pa, p) else ah
-            lr_t = lr(step) if is_muon(pa, p) else adam_sched(step)
-            precond, _, lr_mult, ls = host.update(g, ls, step)
-            new_p.append((p.astype(jnp.float32)
-                          - (lr_t * lr_mult) * precond.astype(jnp.float32)).astype(p.dtype))
-            new_s.append(ls)
-        return (jax.tree_util.tree_unflatten(treedef, new_p),
-                {"step": step + 1, "leaves": tuple(new_s)})
-
-    return Optimizer(init, update)
+    return engine.build(
+        lambda path, leaf: muon_r if is_muon(path, leaf) else adam_r,
+        bucketed=bucketed)

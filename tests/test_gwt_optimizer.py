@@ -53,19 +53,20 @@ def test_module_wise_policy():
     params = make_params()
     o = optim.make("gwt", lr=0.01, level=2)
     st = o.init(params)
-    flat = st["leaves"]
-    # order: embed, mlp/w1, mlp/w2, norm (flatten order of dict keys)
-    from repro.optim.base import flatten_with_paths
-    paths, _, _ = flatten_with_paths(params)
-    for path, leaf_state in zip(paths, flat):
-        if "mlp" in path:
-            assert "prev_norm" in leaf_state, path
-            assert leaf_state["host"]["m"].shape[-1] * 4 \
-                == params["mlp"][path.split("/")[1]].shape[-1] \
-                or leaf_state["host"]["m"].shape[-2] * 4 \
-                == params["mlp"][path.split("/")[1]].shape[-2], path
+    plan = o.engine.plan(params)
+    for b in plan.buckets:
+        bstate = st["buckets"][b.name]
+        if any("mlp" in p for p in b.paths):
+            assert b.rule.kind in ("gwt_last", "gwt_first"), b.name
+            assert "prev_norm" in bstate, b.name
+            for path in b.paths:
+                w = params["mlp"][path.split("/")[1]]
+                m = bstate["host"]["m"]
+                assert (m.shape[-1] * 4 == w.shape[-1]
+                        or m.shape[-2] * 4 == w.shape[-2]), b.name
         else:
-            assert "prev_norm" not in leaf_state, path
+            assert b.rule.kind == "plain", b.name
+            assert "prev_norm" not in bstate, b.name
 
 
 def test_transform_axis_fallback():
@@ -73,8 +74,8 @@ def test_transform_axis_fallback():
     params = {"mlp": {"w": jnp.ones((32, 6))}}  # 6 % 4 != 0, 32 % 4 == 0
     o = optim.make("gwt", lr=0.01, level=2)
     st = o.init(params)
-    m = st["leaves"][0]["host"]["m"]
-    assert m.shape == (6, 8)  # swapped, halved twice
+    m = st["buckets"]["gwt_first__mlp.w"]["host"]["m"]
+    assert m.shape == (1, 6, 8)  # stacked, swapped, halved twice
     g = {"mlp": {"w": jnp.ones((32, 6)) * 0.1}}
     p2, _ = jax.jit(o.update)(g, st, params)
     assert p2["mlp"]["w"].shape == (32, 6)
@@ -160,15 +161,16 @@ def test_galore_projector_refresh():
     o = optim.make("galore", lr=0.01, rank=2, update_gap=3)
     params = {"mlp": {"w": jax.random.normal(jax.random.key(0), (8, 16))}}
     st = o.init(params)
+    proj = lambda st: np.asarray(st["buckets"]["galore__mlp.w"]["proj"])
     g1 = {"mlp": {"w": jax.random.normal(jax.random.key(1), (8, 16))}}
     params, st = jax.jit(o.update)(g1, st, params)     # step0: refresh
-    p_after_0 = np.asarray(st["leaves"][0]["proj"])
+    p_after_0 = proj(st)
     g2 = {"mlp": {"w": jax.random.normal(jax.random.key(2), (8, 16))}}
     params, st = jax.jit(o.update)(g2, st, params)     # step1: keep
-    np.testing.assert_allclose(np.asarray(st["leaves"][0]["proj"]), p_after_0)
+    np.testing.assert_allclose(proj(st), p_after_0)
     params, st = jax.jit(o.update)(g2, st, params)     # step2: keep
     params, st = jax.jit(o.update)(g2, st, params)     # step3: refresh
-    assert not np.allclose(np.asarray(st["leaves"][0]["proj"]), p_after_0)
+    assert not np.allclose(proj(st), p_after_0)
 
 
 def test_gwt_update_orthonormal_energy_invariant():
@@ -199,7 +201,8 @@ def test_gwt_wavelet_choice_changes_subspace_not_memory():
         o = optim.make("gwt", lr=0.01, level=2, wavelet=wavelet,
                        use_limiter=False)
         st = o.init(params)
-        assert st["leaves"][0]["host"]["m"].shape == (16, 16), wavelet
+        m = st["buckets"]["gwt_last__mlp.w"]["host"]["m"]
+        assert m.shape == (1, 16, 16), wavelet
         p2, _ = jax.jit(o.update)(g, st, params)
         outs[wavelet] = np.asarray(p2["mlp"]["w"], np.float32)
     assert not np.allclose(outs["haar"], outs["db2"], atol=1e-6)

@@ -11,7 +11,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.checkpoint.manager import CheckpointManager
+from repro.checkpoint.manager import CheckpointManager, StructureMismatch
 from repro.data.pipeline import ByteLM, Prefetcher, SyntheticLM
 from repro.runtime.fault_tolerance import StepWatchdog, TrainLoop
 
@@ -197,5 +197,8 @@ def test_checkpoint_uncommitted_is_invisible(tmp_path):
 def test_checkpoint_structure_mismatch_raises(tmp_path):
     cm = CheckpointManager(str(tmp_path))
     cm.save(1, {"x": jnp.ones((4,))}, blocking=True)
-    with pytest.raises(AssertionError):
+    with pytest.raises(StructureMismatch):
         cm.restore(None, {"x": jnp.ones((4,)), "extra": jnp.ones((2,))})
+    # shape drift is also caught (typed, so callers can run a migration)
+    with pytest.raises(StructureMismatch):
+        cm.restore(None, {"x": jnp.ones((2, 2))})
