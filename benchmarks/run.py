@@ -337,6 +337,135 @@ def trace_bench(quick: bool):
     emit("trace/json", 0.0, path)
 
 
+# ---------------------------------------------------------------------------
+# Train-step runtime: steps/sec + tokens/sec of the pipelined donated
+# TrainLoop vs the pre-PR eager loop, and peak-live-bytes of the donated
+# vs undonated train step (XLA buffer assignment).  Writes
+# BENCH_step_cpu.json; --quick additionally gates against the committed
+# baseline (>20% steps/sec regression on the headline cell fails CI).
+# ---------------------------------------------------------------------------
+
+STEP_HEADLINE = "gwt_jnp"
+
+
+def _loop_steps_per_sec(loop, params, st, steps, repeats=3):
+    """Best-of-N steps/sec for one warmed loop (compile excluded by a
+    prior untimed run; params/state copied per run — the pipelined loop
+    donates its inputs)."""
+    import jax
+    best = 0.0
+    for _ in range(repeats):
+        p, s = jax.tree.map(lambda a: a.copy(), (params, st))
+        t0 = time.perf_counter()
+        p, s, _ = loop.run(p, s, num_steps=steps)
+        jax.block_until_ready(p)
+        best = max(best, steps / (time.perf_counter() - t0))
+    return best
+
+
+def step_bench(quick: bool):
+    import json
+    import os
+
+    from repro import configs, optim
+    from repro.data.pipeline import SyntheticLM
+    from repro.models import lm
+    from repro.optim.engine import live_update_bytes, state_bytes
+    from repro.runtime.fault_tolerance import TrainLoop
+
+    cfg = configs.get_smoke("llama-60m")
+    B, S = 1, 64
+    chunk = 20                      # superstep length = log cadence
+    silent = lambda s: None  # noqa: E731
+    out = {"config": {"arch": cfg.name, "batch": B, "seq": S,
+                      "chunk": chunk},
+           "cells": {}}
+    cells = [("gwt", "jnp"), ("gwt", "interpret"),
+             ("adam", None), ("galore", None)]
+    for name, impl in cells:
+        tag = f"{name}_{impl}" if impl else name
+        interp = impl == "interpret"
+        steps = (chunk if quick else 2 * chunk) if interp \
+            else (2 * chunk if quick else 3 * chunk)
+        kw = {"level": 2, "impl": impl} if name == "gwt" else \
+            ({"rank_frac": 0.25, "update_gap": 2 * steps}
+             if name == "galore" else {})
+        opt = optim.make(name, lr=1e-3, **kw)
+        params = lm.init(cfg, jax.random.key(0))
+        st = opt.init(params)
+        data = SyntheticLM(cfg.vocab, S, B, seed=0)
+        b0 = {k: jnp.asarray(v) for k, v in data.batch(0).items()}
+
+        # peak live bytes: XLA buffer assignment of the jitted train step,
+        # donated vs not — donation must alias params+opt_state through.
+        plain = jax.jit(lm.make_train_step(cfg, opt)) \
+            .lower(params, st, b0).compile()
+        donated = lm.make_train_step(cfg, opt, donate=True) \
+            .lower(params, st, b0).compile()
+        live_plain, live_don = (live_update_bytes(plain),
+                                live_update_bytes(donated))
+        sb = state_bytes(opt, params)
+
+        # pre-PR loop: per-step dispatch + float(loss) sync, sync fetch,
+        # no donation.
+        eager_loop = TrainLoop(jax.jit(lm.make_train_step(cfg, opt)), None,
+                               data, log_every=10, log=silent,
+                               pipelined=False)
+        eager_loop.run(*jax.tree.map(lambda a: a.copy(), (params, st)),
+                       num_steps=2)  # warm the jit cache
+        eager = _loop_steps_per_sec(eager_loop, params, st, steps,
+                                    repeats=1 if interp else 3)
+
+        # pipelined loop: donated scan-over-chunk supersteps, prefetched
+        # batches, loss fetched once per chunk.
+        pipe_loop = TrainLoop(lm.make_train_step(cfg, opt), None, data,
+                              log_every=chunk, max_chunk=chunk, log=silent)
+        pipe_loop.run(*jax.tree.map(lambda a: a.copy(), (params, st)),
+                      num_steps=chunk)  # compile the superstep
+        pipe = _loop_steps_per_sec(pipe_loop, params, st, steps,
+                                   repeats=1 if interp else 3)
+
+        cell = {"steps_per_sec_eager": round(eager, 2),
+                "steps_per_sec_pipelined": round(pipe, 2),
+                "tokens_per_sec_pipelined": round(pipe * B * S, 1),
+                "speedup": round(pipe / eager, 3),
+                "opt_state_bytes": sb,
+                "peak_live_bytes_plain": live_plain,
+                "peak_live_bytes_donated": live_don}
+        out["cells"][tag] = cell
+        emit(f"step/{tag}", 1e6 / pipe,
+             f"pipelined={pipe:.1f}steps/s eager={eager:.1f} "
+             f"speedup={pipe/eager:.2f}x "
+             f"live={live_don}B vs {live_plain}B undonated")
+        if live_plain is not None and live_don is not None \
+                and live_don >= live_plain:
+            emit(f"step/{tag}_donation_ERROR", 0.0,
+                 f"donated peak live {live_don} >= undonated {live_plain}")
+
+    hl = out["cells"][STEP_HEADLINE]
+    out["headline"] = {"cell": STEP_HEADLINE, "speedup": hl["speedup"]}
+    here = os.path.dirname(os.path.abspath(__file__))
+    committed = os.path.join(here, "BENCH_step_cpu.json")
+    if quick and os.path.exists(committed):
+        with open(committed) as f:
+            base = json.load(f)["cells"].get(STEP_HEADLINE)
+        if base:
+            ref = base["steps_per_sec_pipelined"]
+            now = hl["steps_per_sec_pipelined"]
+            if now < 0.8 * ref:
+                emit("step/regression_ERROR", 0.0,
+                     f"pipelined {now:.1f} steps/s < 80% of committed "
+                     f"{ref:.1f} (gwt_jnp cell)")
+            else:
+                emit("step/regression_gate", 0.0,
+                     f"{now:.1f} steps/s vs committed {ref:.1f} (ok)")
+    path = os.path.join(here, "BENCH_step_cpu_quick.json" if quick
+                        else "BENCH_step_cpu.json")
+    with open(path, "w") as f:
+        json.dump(out, f, indent=1)
+    emit("step/json", 0.0, path)
+
+
 TABLES = {
     "table1": table1_memory,
     "table2": table2_pretrain,
@@ -346,6 +475,7 @@ TABLES = {
     "table12": table12_levels,
     "kernels": kernels_bench,
     "trace": trace_bench,
+    "step": step_bench,
 }
 
 

@@ -1,8 +1,10 @@
 #!/usr/bin/env bash
-# Single CI entry point: compat smoke-import check + the tier-1 suite.
+# Single CI entry point: compat smoke-import check + benchmark gates +
+# the tier-1 suite.
 #
 #   ./scripts/verify.sh            # full tier-1
 #   ./scripts/verify.sh --smoke    # import check only (seconds)
+#   ./scripts/verify.sh --quick    # import check + benchmark gates only
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -31,6 +33,14 @@ fi
 
 echo "== trace/compile benchmark smoke (bucketed engine vs per-leaf) =="
 python -m benchmarks.run --only trace --quick
+
+echo "== train-step runtime benchmark (pipelined loop + donation gate; =="
+echo "== fails on >20% steps/sec regression vs committed BENCH_step_cpu) =="
+python -m benchmarks.run --only step --quick
+
+if [[ "${1:-}" == "--quick" ]]; then
+    exit 0
+fi
 
 echo "== tier-1 test suite =="
 python -m pytest -x -q

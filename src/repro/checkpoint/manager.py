@@ -113,13 +113,25 @@ class CheckpointManager:
         for s in steps[:-self.gc_keep]:
             shutil.rmtree(self._step_dir(s), ignore_errors=True)
 
-    def save(self, step: int, tree: Any, *, blocking: bool = False):
+    def save(self, step: int, tree: Any, *, blocking: bool = False,
+             snapshot: bool = False):
         """Async by default; the previous async save is joined first (at
-        most one in flight — bounds host memory)."""
+        most one in flight — bounds host memory).
+
+        ``snapshot=True`` takes an on-device copy of every leaf before
+        handing the tree to the writer thread.  Required when the caller
+        donates its buffers to the next step (the pipelined train loop):
+        without it the async writer would ``device_get`` arrays whose
+        buffers XLA has already reused.  The copy is device-side and
+        cheap; the brief ``block_until_ready`` guarantees the copies are
+        materialized before the caller's next donated dispatch."""
         self.wait()
         if blocking:
             self._write(step, tree)
             return
+        if snapshot:
+            tree = jax.tree_util.tree_map(lambda a: a.copy(), tree)
+            jax.block_until_ready(tree)
         # device_get in the caller thread is avoided: jax arrays are
         # snapshotted lazily inside the writer (they are immutable).
         self._thread = threading.Thread(

@@ -46,7 +46,10 @@ def get_config(name: str) -> ModelConfig:
 def get_smoke(name: str) -> ModelConfig:
     if name in _MODULES:
         return _MODULES[name].SMOKE
-    raise ValueError(f"unknown arch {name!r}; choices: {ARCH_IDS}")
+    if name in LLAMA:
+        return llama_paper.smoke(LLAMA[name])
+    raise ValueError(
+        f"unknown arch {name!r}; choices: {ARCH_IDS + list(LLAMA)}")
 
 
 __all__ = ["ModelConfig", "ShapeConfig", "SHAPES", "input_specs",

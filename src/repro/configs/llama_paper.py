@@ -12,6 +12,18 @@ def _llama(name, n_layers, d_model, n_heads, d_ff, vocab=32000):
         tie_embeddings=True, sub_quadratic=False, remat=False)
 
 
+def smoke(cfg: ModelConfig) -> ModelConfig:
+    """CI-scale variant of a LLaMA family member: 2 layers, d=32, f32.
+
+    Small enough that the *runtime* (dispatch, data fetch, host syncs)
+    is a visible fraction of the step — the regime the train-loop
+    benchmark and the preempt/resume tests exercise on CPU."""
+    return cfg.with_(
+        name=f"{cfg.name}-smoke", n_layers=2, d_model=32, n_heads=2,
+        n_kv_heads=2, head_dim=16, d_ff=64, vocab=64, dtype="float32",
+        remat=False)
+
+
 LLAMA_60M = _llama("llama-60m", 8, 512, 8, 1376)
 LLAMA_130M = _llama("llama-130m", 12, 768, 12, 2048)
 LLAMA_350M = _llama("llama-350m", 24, 1024, 16, 2736)

@@ -80,13 +80,45 @@ class ByteLM:
         return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
 
 
+class WithEncoderFrames:
+    """Encoder-decoder adapter: rides deterministic frame embeddings
+    ``(B, n_frames, d_model)`` along each LM batch (the audio-frontend stub
+    for seamless-style encdec training — previously a ``source.batch``
+    monkey-patch in launch/train.py).
+
+    Determinism matches the base source's contract: ``batch(i)`` depends
+    only on ``i`` (frames are seeded by the batch index alone, preserving
+    the pre-adapter stream for resume alignment)."""
+
+    def __init__(self, source, n_frames: int, d_model: int):
+        self.source = source
+        self.n_frames = n_frames
+        self.d_model = d_model
+        self.batch_size = source.batch_size
+
+    def batch(self, index: int) -> Dict[str, np.ndarray]:
+        b = dict(self.source.batch(index))
+        rng = np.random.RandomState(index)
+        b["enc_embeds"] = rng.randn(
+            self.batch_size, self.n_frames, self.d_model).astype(np.float32)
+        return b
+
+
+def stack_batches(batches) -> Dict[str, np.ndarray]:
+    """Stack a list of ``batch(i)`` dicts along a new leading axis —
+    the xs of the train loop's scan-over-steps superstep."""
+    return {k: np.stack([b[k] for b in batches]) for k in batches[0]}
+
+
 class Prefetcher:
     """Bounded-queue background prefetch over ``source.batch(i)``,
-    resumable from any step."""
+    resumable from any step.  Usable as a context manager; batch order is
+    exactly ``start_step, start_step+1, ...`` (the consumer may assert the
+    yielded index for stream-alignment checks)."""
 
     def __init__(self, source, start_step: int = 0, depth: int = 2):
         self.source = source
-        self._q: "queue.Queue" = queue.Queue(maxsize=depth)
+        self._q: "queue.Queue" = queue.Queue(maxsize=max(depth, 1))
         self._stop = threading.Event()
         self._step = start_step
         self._thread = threading.Thread(target=self._run, daemon=True)
@@ -94,11 +126,15 @@ class Prefetcher:
 
     def _run(self):
         i = self._step
+        pending = None
         while not self._stop.is_set():
+            if pending is None:
+                pending = (i, self.source.batch(i))  # computed exactly once
             try:
-                self._q.put((i, self.source.batch(i)), timeout=0.5)
+                self._q.put(pending, timeout=0.5)
+                pending = None
                 i += 1
-            except queue.Full:
+            except queue.Full:   # retry the put only — never the batch gen
                 continue
 
     def __iter__(self) -> Iterator:
@@ -108,15 +144,28 @@ class Prefetcher:
         i, b = self._q.get()
         return i, b
 
+    def __enter__(self) -> "Prefetcher":
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
     def close(self):
         self._stop.set()
 
 
 def make_source(kind: str, vocab: int, seq_len: int, batch_size: int,
-                seed: int = 0, pattern: Optional[str] = None):
+                seed: int = 0, pattern: Optional[str] = None,
+                enc_frames: int = 0, enc_dim: int = 0):
+    """``enc_frames``/``enc_dim`` > 0 wrap the source in
+    :class:`WithEncoderFrames` (encoder-decoder training batches)."""
     if kind == "synthetic":
-        return SyntheticLM(vocab, seq_len, batch_size, seed)
-    if kind == "bytes":
-        return ByteLM(pattern or "src/**/*.py", seq_len, batch_size, seed,
-                      vocab=min(vocab, 256))
-    raise ValueError(f"unknown data source {kind!r}")
+        src = SyntheticLM(vocab, seq_len, batch_size, seed)
+    elif kind == "bytes":
+        src = ByteLM(pattern or "src/**/*.py", seq_len, batch_size, seed,
+                     vocab=min(vocab, 256))
+    else:
+        raise ValueError(f"unknown data source {kind!r}")
+    if enc_frames and enc_dim:
+        src = WithEncoderFrames(src, enc_frames, enc_dim)
+    return src

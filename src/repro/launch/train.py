@@ -16,7 +16,6 @@ from __future__ import annotations
 import argparse
 
 import jax
-import jax.numpy as jnp
 
 from repro import configs, optim
 from repro.checkpoint.manager import CheckpointManager
@@ -53,6 +52,7 @@ def main(argv=None):
                     choices=["synthetic", "bytes"])
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--ckpt-every", type=int, default=100)
+    ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--resume", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--mesh", default="",
@@ -102,23 +102,18 @@ def main(argv=None):
     print(f"arch={cfg.name} params={n_params/1e6:.1f}M "
           f"optimizer={args.optimizer} opt_state={mem_bytes/2**20:.1f}MiB")
 
+    # Encoder-decoder batches carry the audio-frontend frame stub; the
+    # adapter lives in the pipeline (WithEncoderFrames), not a monkey-patch.
+    enc = cfg.arch_class == "encdec"
     source = make_source(args.data, cfg.vocab, args.seq, args.batch,
-                         seed=args.seed)
-    if cfg.arch_class == "encdec":
-        base_batch = source.batch
-        import numpy as np
+                         seed=args.seed,
+                         enc_frames=args.seq // 4 if enc else 0,
+                         enc_dim=cfg.d_model if enc else 0)
 
-        def batch_with_enc(i):
-            b = base_batch(i)
-            rng = np.random.RandomState(i)
-            b["enc_embeds"] = rng.randn(
-                args.batch, args.seq // 4, cfg.d_model).astype(np.float32)
-            return b
-        source.batch = batch_with_enc  # type: ignore
-
-    train_step = jax.jit(mod.make_train_step(cfg, optimizer,
-                                             accum_steps=args.accum,
-                                             ctx=ctx))
+    # Raw (un-jitted) step: TrainLoop compiles it inside its donated
+    # scan-over-chunk superstep (runtime/fault_tolerance.py).
+    train_step = mod.make_train_step(cfg, optimizer, accum_steps=args.accum,
+                                     ctx=ctx)
     ckpt = CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
     start = 0
     if args.resume and ckpt is not None and ckpt.latest_step() is not None:
@@ -146,11 +141,17 @@ def main(argv=None):
         params, opt_state = state["params"], state["opt"]
         print(f"resumed from step {start}")
 
-    loop = TrainLoop(train_step, ckpt, source, ckpt_every=args.ckpt_every)
+    loop = TrainLoop(train_step, ckpt, source, ckpt_every=args.ckpt_every,
+                     log_every=args.log_every, save_final=ckpt is not None)
     with ctx.activate():
         params, opt_state, losses = loop.run(params, opt_state,
                                              start_step=start,
                                              num_steps=args.steps)
+    wd = loop.watchdog.summary()
+    if wd["dispatch_s_per_step"] is not None:
+        print(f"dispatch={wd['dispatch_s_per_step']*1e3:.1f}ms/step "
+              f"blocked={(wd['blocked_s_per_step'] or 0)*1e3:.1f}ms/step "
+              f"incidents={wd['incidents']}")
     if losses:
         k = max(1, len(losses) // 10)
         print(f"final loss (mean of last {k}): "

@@ -172,7 +172,9 @@ def loss_fn(cfg, params, batch, ctx: MeshContext = None) -> jax.Array:
 
 
 def make_train_step(cfg, optimizer, accum_steps: int = 1,
-                    ctx: MeshContext = None):
+                    ctx: MeshContext = None, donate: bool = False):
+    """``donate=True`` jits with ``donate_argnums=(0, 1)`` — same
+    single-buffered params/opt-state contract as ``lm.make_train_step``."""
     from repro.models.lm import microbatch_split
 
     def train_step(params, opt_state, batch):
@@ -191,6 +193,8 @@ def make_train_step(cfg, optimizer, accum_steps: int = 1,
         grads = jax.tree.map(lambda g: (g / accum_steps).astype(cfg.dtype), gsum)
         new_params, new_opt = optimizer.update(grads, opt_state, params)
         return new_params, new_opt, {"loss": lsum / accum_steps}
+    if donate:
+        return jax.jit(train_step, donate_argnums=(0, 1))
     return train_step
 
 

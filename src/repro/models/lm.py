@@ -347,7 +347,8 @@ def microbatch_split(batch: Dict[str, jax.Array], accum: int,
 
 
 def make_train_step(cfg, optimizer, accum_steps: int = 1,
-                    grad_shardings=None, ctx: MeshContext = None):
+                    grad_shardings=None, ctx: MeshContext = None,
+                    donate: bool = False):
     """Gradient-accumulated train step: ``batch`` is the GLOBAL batch; a
     shard-preserving reshape feeds a microbatch ``lax.scan``.
 
@@ -356,6 +357,14 @@ def make_train_step(cfg, optimizer, accum_steps: int = 1,
     accumulation — the cross-data reduce-scatter then moves bf16, not f32
     (half the dominant DP wire bytes), and the f32 accumulator itself is
     fully sharded.
+
+    ``donate=True`` returns the step already jitted with
+    ``donate_argnums=(0, 1)``: XLA aliases the ``(params, opt_state)``
+    input buffers into the outputs, so params + optimizer state stay
+    single-buffered across steps instead of double-buffered (~2× peak
+    state memory without it).  The caller must rebind, not reuse, the
+    arrays it passes in.  ``donate=False`` keeps the historical behaviour
+    of returning the raw traceable function.
     """
 
     def train_step(params, opt_state, batch):
@@ -383,6 +392,8 @@ def make_train_step(cfg, optimizer, accum_steps: int = 1,
         new_params, new_opt = optimizer.update(grads, opt_state, params)
         return new_params, new_opt, {"loss": lsum / accum_steps}
 
+    if donate:
+        return jax.jit(train_step, donate_argnums=(0, 1))
     return train_step
 
 

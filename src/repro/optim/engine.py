@@ -223,3 +223,31 @@ def state_bytes(optimizer: Optimizer, params) -> int:
     abstract = jax.eval_shape(optimizer.init, params)
     return sum(l.size * jnp.dtype(l.dtype).itemsize
                for l in jax.tree_util.tree_leaves(abstract))
+
+
+def jit_update(optimizer: Optimizer, donate: bool = True):
+    """Jit the bucketed ``update`` with ``(grads, state)`` donated.
+
+    The bucketed stacks then update in place — one live copy of the
+    optimizer state instead of old+new double-buffering, and the gradient
+    buffers are recycled into the outputs.  ``params`` (arg 2) is never
+    donated here: standalone-update callers usually still own it.  Inside
+    a donated *train step* the whole ``(params, opt_state)`` pair aliases
+    through (see ``lm.make_train_step(donate=True)``)."""
+    return jax.jit(optimizer.update,
+                   donate_argnums=(0, 1) if donate else ())
+
+
+def live_update_bytes(compiled) -> Optional[int]:
+    """Peak live bytes of a compiled update/train-step executable:
+    ``arguments + outputs − donation aliases + temporaries``, straight
+    from XLA's buffer assignment.  ``None`` when the backend exposes no
+    ``memory_analysis`` (the benchmark then skips the donation check)."""
+    try:
+        ma = compiled.memory_analysis()
+    except Exception:
+        return None
+    if ma is None:
+        return None
+    return int(ma.argument_size_in_bytes + ma.output_size_in_bytes
+               - ma.alias_size_in_bytes + ma.temp_size_in_bytes)

@@ -1,15 +1,31 @@
-"""Fault-tolerant training runtime: preemption handling, auto-resume,
-step watchdog / straggler detection, and an elastic re-mesh hook.
+"""Fault-tolerant training runtime: pipelined superstep train loop with
+buffer donation, preemption handling, auto-resume, a dispatch/block-split
+step watchdog, and an elastic re-mesh hook.
 
 Designed for the 1000+-node posture (DESIGN.md §4):
 
-* **Preemption**: SIGTERM/SIGINT set a flag; the train loop checkpoints
-  synchronously and exits 0 (the scheduler restarts the job, which
-  auto-resumes from the latest committed step).
-* **Watchdog**: an EMA of step time; steps slower than ``k×EMA`` are logged
-  with a monotonically-increasing incident id — on a real pod this is where
-  per-host attribution (via ``jax.process_index`` heartbeats) plugs in.
-  Input-side stragglers are already decoupled by the data prefetcher.
+* **Pipelined supersteps**: the loop dispatches a ``lax.scan`` over a
+  *chunk* of train steps per device call, with ``(params, opt_state)``
+  donated across chunks — host python (batch stacking, dispatch) amortizes
+  over the chunk and the optimizer state is single-buffered end to end.
+  Loss lands in an on-device ``(k,)`` accumulator; the host fetches it only
+  at ``log_every`` boundaries, so dispatch never serializes on a per-step
+  ``float()`` sync.
+* **Deterministic chunk grid**: chunk boundaries are *absolute* step
+  numbers (next multiple of ``log_every`` / ``ckpt_every`` / ``max_chunk``
+  / ``num_steps``), never relative to where a run started.  A resumed run
+  therefore re-executes the exact same scan groupings as an uninterrupted
+  one — bit-identical final params (tested in test_runtime_pipeline.py).
+* **Preemption**: SIGTERM/SIGINT set a flag; the loop checkpoints
+  synchronously at the current chunk boundary and exits 0 (the scheduler
+  restarts the job, which auto-resumes from the latest committed step).
+* **Snapshot-then-save**: periodic checkpoints are taken from an on-device
+  copy (``CheckpointManager.save(snapshot=True)``) so the async writer
+  never races the next chunk's buffer donation.
+* **Watchdog**: separate EMAs for *dispatch* time (async enqueue — what the
+  host pays per step) and *blocked* time (host stalled on device results at
+  log/checkpoint boundaries).  Straggler incidents are flagged per phase;
+  on a real pod this is where per-host attribution plugs in.
 * **Elastic re-mesh**: ``CheckpointManager.restore(shardings=...)`` reshards
   on load, so a restart under a different device count only needs a new
   mesh + sharding tree (exercised in tests with different CPU device
@@ -20,7 +36,7 @@ from __future__ import annotations
 
 import signal
 import time
-from typing import Callable, Optional
+from typing import Callable, List, Optional
 
 
 class PreemptionHandler:
@@ -42,72 +58,289 @@ class PreemptionHandler:
 
 
 class StepWatchdog:
+    """Two-phase straggler monitor.
+
+    * ``start()`` / ``stop(step, n_steps)`` time the **dispatch** phase:
+      how long the host spends enqueueing ``n_steps`` worth of work.  Under
+      an async backend this is python + transfer overhead, NOT device
+      compute — which is why it is tracked separately from
+    * ``block(dt, n_steps)``: the **blocked** phase — host time stalled on
+      device results (metric fetches at ``log_every``, snapshot syncs,
+      blocking saves).  Device-side stragglers surface here.
+
+    Each phase keeps a per-step EMA; a sample slower than
+    ``slow_factor×EMA`` is logged with a monotonically-increasing incident
+    id.  ``ema`` (dispatch) keeps its pre-split name for callers that only
+    track one phase.
+    """
+
     def __init__(self, slow_factor: float = 3.0, ema_alpha: float = 0.1,
                  log: Callable[[str], None] = print):
         self.slow_factor = slow_factor
         self.alpha = ema_alpha
-        self.ema: Optional[float] = None
+        self.ema: Optional[float] = None         # dispatch s/step
+        self.block_ema: Optional[float] = None   # blocked s/step
         self.incidents = 0
         self.log = log
         self._t0: Optional[float] = None
+        self._step = 0
+
+    def _observe(self, phase: str, step: int, per_step: float,
+                 ema: Optional[float]) -> float:
+        if ema is not None and per_step > self.slow_factor * ema:
+            self.incidents += 1
+            self.log(f"[watchdog] step {step}: {phase} {per_step:.3f}s/step"
+                     f" > {self.slow_factor:.1f}x EMA {ema:.3f}s "
+                     f"(incident #{self.incidents})")
+        return per_step if ema is None \
+            else self.alpha * per_step + (1 - self.alpha) * ema
 
     def start(self):
         self._t0 = time.monotonic()
 
-    def stop(self, step: int) -> float:
+    def stop(self, step: int, n_steps: int = 1, record: bool = True) -> float:
+        """``record=False`` returns the elapsed time without feeding the
+        EMA — used for samples known to be unrepresentative (a chunk
+        length's first dispatch includes its XLA compile; letting that
+        seed the EMA would mask real stragglers for many chunks)."""
         dt = time.monotonic() - self._t0
-        if self.ema is None:
-            self.ema = dt
-        elif dt > self.slow_factor * self.ema:
-            self.incidents += 1
-            self.log(f"[watchdog] step {step}: {dt:.3f}s > "
-                     f"{self.slow_factor:.1f}x EMA {self.ema:.3f}s "
-                     f"(incident #{self.incidents})")
-        self.ema = self.alpha * dt + (1 - self.alpha) * (self.ema or dt)
+        self._step = step
+        if record:
+            self.ema = self._observe("dispatch", step, dt / max(n_steps, 1),
+                                     self.ema)
         return dt
+
+    def block(self, dt: float, n_steps: int = 1, step: Optional[int] = None):
+        self.block_ema = self._observe(
+            "blocked", self._step if step is None else step,
+            dt / max(n_steps, 1), self.block_ema)
+
+    def summary(self) -> dict:
+        return {"dispatch_s_per_step": self.ema,
+                "blocked_s_per_step": self.block_ema,
+                "incidents": self.incidents}
 
 
 class TrainLoop:
     """Checkpointed, preemption-safe, straggler-monitored loop around a
-    compiled train_step.  Used by launch/train.py and the examples."""
+    train_step ``(params, opt_state, batch) -> (params, opt_state,
+    metrics)``.  Used by launch/train.py, the examples, and the step
+    benchmark.
+
+    ``pipelined=True`` (default) wraps the step in a jitted
+    scan-over-chunk *superstep* with ``donate_argnums=(params,
+    opt_state)`` — pass the **un-jitted** step function (a pre-jitted one
+    works too; it simply inlines).  The arrays passed to :meth:`run` are
+    donated on the first dispatch and must not be reused by the caller
+    (their shapes/dtypes stay readable).  ``donate=False`` opts out for
+    callers that need the inputs afterwards.
+
+    ``pipelined=False`` reproduces the pre-pipeline loop — one dispatch
+    and one blocking ``float(loss)`` per step, synchronous batch fetch, no
+    donation — and is what ``benchmarks/run.py step`` measures the
+    pipelined loop against.
+    """
 
     def __init__(self, train_step, ckpt, data_source, *,
                  ckpt_every: int = 100, log_every: int = 10,
-                 log: Callable[[str], None] = print):
+                 log: Callable[[str], None] = print,
+                 pipelined: bool = True, donate: bool = True,
+                 max_chunk: int = 16, save_final: bool = False):
         self.train_step = train_step
         self.ckpt = ckpt
         self.data = data_source
         self.ckpt_every = ckpt_every
         self.log_every = log_every
         self.log = log
+        self.pipelined = pipelined
+        self.donate = donate
+        self.max_chunk = max(int(max_chunk), 1)
+        self.save_final = save_final
         self.watchdog = StepWatchdog(log=log)
         self.preempt = PreemptionHandler()
+        self._superstep = None  # built lazily, reused across run() calls
+        # Align the chunk grid to log_every when a reasonable divisor
+        # exists: uniform chunk lengths mean ONE superstep compilation
+        # instead of one per distinct length (log_every=20, max_chunk=16
+        # would otherwise produce 16/4/12/8-step chunks, each compiled).
+        # log_every boundaries cap chunks regardless, so the divisor only
+        # has to be a decent fraction of min(max_chunk, log_every) — not
+        # of max_chunk itself — to win; below that (e.g. prime log_every
+        # smaller than max_chunk/2) mixed lengths amortize better than a
+        # degenerate tiny uniform grid.
+        g = self.max_chunk
+        if log_every:
+            cap = min(g, log_every)
+            d = next((d for d in range(cap, 0, -1)
+                      if log_every % d == 0), g)
+            if d >= max(1, cap // 2):
+                g = d
+        self._grid = g
+
+    # -- pipelined machinery -----------------------------------------------
+    def _build_superstep(self):
+        import jax
+        train_step = self.train_step
+
+        def superstep(params, opt_state, batches):
+            def body(carry, batch):
+                p, s = carry
+                p, s, metrics = train_step(p, s, batch)
+                return (p, s), metrics["loss"]
+
+            (params, opt_state), losses = jax.lax.scan(
+                body, (params, opt_state), batches)
+            return params, opt_state, losses
+
+        kw = {"donate_argnums": (0, 1)} if self.donate else {}
+        return jax.jit(superstep, **kw)
+
+    def _chunk_end(self, step: int, num_steps: int) -> int:
+        """Next chunk boundary AFTER ``step`` on the absolute grid.
+
+        Boundaries are multiples of ``max_chunk`` / ``log_every`` /
+        ``ckpt_every`` plus ``num_steps`` — a pure function of the step
+        number, so a resumed run partitions the remaining steps exactly
+        like the original run did (scan groupings, and hence float
+        reduction order, are reproduced bit-for-bit)."""
+        def nxt(every: int) -> int:
+            return (step // every + 1) * every
+
+        ends = [num_steps, nxt(self._grid)]
+        if self.log_every:
+            ends.append(nxt(self.log_every))
+        if self.ckpt is not None and self.ckpt_every:
+            ends.append(nxt(self.ckpt_every))
+        return max(min(ends), step + 1)
+
+    def _save(self, step, params, opt_state, *, blocking=False,
+              snapshot=False):
+        self.ckpt.save(step, {"params": params, "opt": opt_state},
+                       blocking=blocking, snapshot=snapshot)
+
+    def _finalize(self, step, params, opt_state, preempted, last_saved):
+        """Shared run epilogue: final blocking save (unless this step was
+        just checkpointed, or the preempt path already saved it) + join
+        the async writer."""
+        if self.ckpt is None:
+            return
+        if self.save_final and not preempted and last_saved != step:
+            self._save(step, params, opt_state, blocking=True)
+        self.ckpt.wait()
 
     def run(self, params, opt_state, *, start_step: int = 0,
             num_steps: int = 100):
+        if not self.pipelined:
+            return self._run_eager(params, opt_state, start_step, num_steps)
+        import jax
+        import jax.numpy as jnp
+        import numpy as np
+
+        from repro.data.pipeline import Prefetcher, stack_batches
+
+        if self._superstep is None:
+            self._superstep = self._build_superstep()
+
+        losses: List[float] = []
+        window: list = []   # device (k,) loss vectors pending one host fetch
+        nwin = 0
+
+        def flush():
+            nonlocal window, nwin
+            if not window:
+                return
+            t0 = time.monotonic()
+            vals = np.concatenate([np.asarray(v)
+                                   for v in jax.device_get(window)])
+            self.watchdog.block(time.monotonic() - t0, nwin)
+            losses.extend(float(v) for v in vals)
+            window, nwin = [], 0
+
+        step = start_step
+        pf = Prefetcher(self.data, start_step=step, depth=2 * self.max_chunk)
+        preempted = False
+        last_saved = None
+        compiled_sizes: set = set()   # chunk lengths whose compile is paid
+        try:
+            while step < num_steps:
+                end = self._chunk_end(step, num_steps)
+                k = end - step
+                batches = []
+                for j in range(k):
+                    i, b = next(pf)
+                    if i != step + j:   # bit-determinism depends on this
+                        raise RuntimeError(f"data stream desync: got batch "
+                                           f"{i}, want {step + j}")
+                    batches.append(b)
+                chunk = {kk: jnp.asarray(v)
+                         for kk, v in stack_batches(batches).items()}
+                self.watchdog.start()
+                params, opt_state, lchunk = self._superstep(params, opt_state,
+                                                            chunk)
+                dt = self.watchdog.stop(step, k,
+                                        record=k in compiled_sizes)
+                compiled_sizes.add(k)
+                window.append(lchunk)
+                nwin += k
+                step = end
+                if self.log_every and step % self.log_every == 0:
+                    flush()
+                    self.log(f"step {step}: loss={losses[-1]:.4f} "
+                             f"(dispatch {dt / k * 1e3:.1f}ms/step, blocked "
+                             f"{(self.watchdog.block_ema or 0) * 1e3:.1f}"
+                             f"ms/step)")
+                if self.ckpt is not None and self.ckpt_every \
+                        and step % self.ckpt_every == 0:
+                    t0 = time.monotonic()
+                    self._save(step, params, opt_state, snapshot=True)
+                    last_saved = step
+                    self.watchdog.block(time.monotonic() - t0, k)
+                if self.preempt.requested:
+                    preempted = True
+                    flush()
+                    self.log(f"[preempt] checkpoint@{step} and exit")
+                    if self.ckpt is not None:
+                        self._save(step, params, opt_state, blocking=True)
+                    break
+        finally:
+            pf.close()
+        flush()
+        self._finalize(step, params, opt_state, preempted, last_saved)
+        return params, opt_state, losses
+
+    # -- pre-pipeline reference loop ---------------------------------------
+    def _run_eager(self, params, opt_state, start_step: int, num_steps: int):
+        """The pre-pipeline semantics: sync fetch, one dispatch + one
+        ``float(loss)`` host sync per step, undonated buffers.  Kept as the
+        benchmark baseline and for callers that need per-step host
+        control."""
         import jax
         step = start_step
-        losses = []
+        losses: List[float] = []
+        last_saved = None
         while step < num_steps:
             batch = self.data.batch(step)
             batch = {k: jax.numpy.asarray(v) for k, v in batch.items()}
             self.watchdog.start()
             params, opt_state, metrics = self.train_step(params, opt_state,
                                                          batch)
+            self.watchdog.stop(step)
+            t0 = time.monotonic()
             loss = float(metrics["loss"])
-            dt = self.watchdog.stop(step)
+            self.watchdog.block(time.monotonic() - t0)
             losses.append(loss)
             step += 1
-            if step % self.log_every == 0:
-                self.log(f"step {step}: loss={loss:.4f} ({dt*1e3:.0f}ms)")
-            if step % self.ckpt_every == 0 and self.ckpt is not None:
-                self.ckpt.save(step, {"params": params, "opt": opt_state})
+            if self.log_every and step % self.log_every == 0:
+                self.log(f"step {step}: loss={loss:.4f}")
+            if self.ckpt is not None and self.ckpt_every \
+                    and step % self.ckpt_every == 0:
+                self._save(step, params, opt_state)
+                last_saved = step
             if self.preempt.requested:
                 self.log(f"[preempt] checkpoint@{step} and exit")
                 if self.ckpt is not None:
-                    self.ckpt.save(step, {"params": params, "opt": opt_state},
-                                   blocking=True)
+                    self._save(step, params, opt_state, blocking=True)
                 break
-        if self.ckpt is not None:
-            self.ckpt.wait()
+        self._finalize(step, params, opt_state, self.preempt.requested,
+                       last_saved)
         return params, opt_state, losses

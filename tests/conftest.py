@@ -1,11 +1,46 @@
 """Test fixtures.  NOTE: no XLA_FLAGS here — unit tests must see the real
 single CPU device; multi-device tests spawn subprocesses with their own
-XLA_FLAGS (see test_distributed.py)."""
+XLA_FLAGS (see test_distributed.py).
+
+Backend-sweep tier (ROADMAP multi-backend item): the ``kernel_impl``
+fixture parametrizes kernel/engine equivalence tests over
+``impl ∈ {jnp, interpret}``.  The ``interpret`` leg (Pallas interpreter —
+slow on CPU) carries the ``slow`` marker and is skipped by default so
+tier-1 stays fast; run it with ``pytest --runslow`` (``pallas`` itself
+needs TPU hardware and is covered by the same entry points via
+``REPRO_KERNEL_IMPL`` once available).
+"""
 
 import jax
 import pytest
 
 
+def pytest_addoption(parser):
+    parser.addoption("--runslow", action="store_true", default=False,
+                     help="also run tests marked slow (backend-sweep tier)")
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers", "slow: backend-sweep / long-running tier (needs --runslow)")
+
+
+def pytest_collection_modifyitems(config, items):
+    if config.getoption("--runslow"):
+        return
+    skip = pytest.mark.skip(reason="slow tier: use --runslow")
+    for item in items:
+        if "slow" in item.keywords:
+            item.add_marker(skip)
+
+
 @pytest.fixture(scope="session")
 def key():
     return jax.random.key(0)
+
+
+@pytest.fixture(params=["jnp",
+                        pytest.param("interpret", marks=pytest.mark.slow)])
+def kernel_impl(request):
+    """Fused-kernel backend under test (jnp fast tier; interpret slow)."""
+    return request.param

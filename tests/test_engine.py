@@ -217,3 +217,21 @@ def test_default_eligible_has_no_block_param():
     assert default_eligible("layer/mlp/w", jnp.ones((6, 6)))
     assert not default_eligible("embed", jnp.ones((6, 6)))
     assert not default_eligible("layer/mlp/w", jnp.ones((6,)))
+
+
+def test_bucketed_gwt_backend_sweep(kernel_impl):
+    """Backend-sweep tier (conftest fixture): the bucketed GWT engine —
+    including the fused vector_update path — matches the per-leaf jnp
+    reference under every swept kernel impl."""
+    params = layered_params()
+    pb, sb = run_steps(optim.make("gwt", lr=0.01, level=2,
+                                  impl=kernel_impl), params)
+    pu, su = run_steps(optim.make("gwt", lr=0.01, level=2, bucketed=False,
+                                  impl="jnp"), params)
+    for a, b in zip(jax.tree.leaves(pb), jax.tree.leaves(pu)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-5)
+    for a, b in zip(jax.tree.leaves(sb), jax.tree.leaves(su)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=1e-4, atol=1e-5)

@@ -77,3 +77,26 @@ def test_block_picker_constraints():
         assert m % bm == 0 and n % bn == 0
         assert bn % (1 << level) == 0
         assert 4 * bm * bn * 4 <= 8 * 1024 * 1024  # fits VMEM budget
+
+
+def test_fused_update_backend_sweep(kernel_impl):
+    """Backend-sweep tier (conftest fixture): the optimizer-facing
+    fused_update entry point agrees with the pure-jnp ref oracle under
+    every swept impl (jnp fast tier, interpret via --runslow; pallas
+    rides the same knob on TPU)."""
+    m, n, level = 64, 256, 2
+    k = jax.random.key(11)
+    g = jax.random.normal(k, (m, n), jnp.float32)
+    st = {"m": jnp.abs(jax.random.normal(jax.random.fold_in(k, 1),
+                                         (m, n >> level))) * 0.1,
+          "v": jnp.abs(jax.random.normal(jax.random.fold_in(k, 2),
+                                         (m, n >> level))) * 0.01}
+    gt_k, lm_k, st_k = gops.fused_update(g, st, jnp.int32(3), level=level,
+                                         impl=kernel_impl)
+    gt_r, mr, vr, _ = rg.gwt_adam_tile(g, st["m"], st["v"], level=level)
+    np.testing.assert_allclose(np.asarray(gt_k), np.asarray(gt_r),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(st_k["m"]), np.asarray(mr),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(st_k["v"]), np.asarray(vr),
+                               rtol=1e-5, atol=1e-7)

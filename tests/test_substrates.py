@@ -202,3 +202,23 @@ def test_checkpoint_structure_mismatch_raises(tmp_path):
     # shape drift is also caught (typed, so callers can run a migration)
     with pytest.raises(StructureMismatch):
         cm.restore(None, {"x": jnp.ones((2, 2))})
+
+
+def test_watchdog_splits_dispatch_and_block():
+    """Satellite fix: the watchdog reports dispatch (async enqueue) and
+    blocked (host stalled on device) phases separately — a device-side
+    straggler shows up as a block incident even when dispatch stays fast."""
+    logs = []
+    wd = StepWatchdog(slow_factor=2.0, log=logs.append)
+    for i in range(4):
+        wd.start()
+        wd.stop(i, n_steps=2)
+        wd.block(0.002, n_steps=2)
+    before = wd.incidents
+    wd.block(0.5, n_steps=1, step=99)
+    assert wd.incidents == before + 1
+    assert any("blocked" in line for line in logs)
+    s = wd.summary()
+    assert s["dispatch_s_per_step"] is not None
+    assert s["blocked_s_per_step"] is not None
+    assert s["incidents"] == wd.incidents
