@@ -38,6 +38,10 @@ echo "== train-step runtime benchmark (pipelined loop + donation gate; =="
 echo "== fails on >20% steps/sec regression vs committed BENCH_step_cpu) =="
 python -m benchmarks.run --only step --quick
 
+echo "== sharded train path benchmark (8-device sim; fails unless the =="
+echo "== compressed DP wire moves >=2x fewer bytes at level >= 2) =="
+python -m benchmarks.run --only shard --quick
+
 if [[ "${1:-}" == "--quick" ]]; then
     exit 0
 fi

@@ -200,6 +200,50 @@ def with_sharding_constraint(x, *spec, mesh=None):
 
 
 # ---------------------------------------------------------------------------
+# shard_map: top-level jax.shard_map (0.6+, manual axes named via
+# ``axis_names``) vs jax.experimental.shard_map.shard_map (0.4.x/0.5.x,
+# manual-by-default with an ``auto`` complement set).
+# ---------------------------------------------------------------------------
+
+_NATIVE_SHARD_MAP = _probe(jax, "shard_map")
+
+
+def _experimental_shard_map():
+    from jax.experimental.shard_map import shard_map as sm
+    return sm
+
+
+def shard_map(f, mesh, in_specs, out_specs, auto=frozenset()):
+    """Portable ``shard_map``: manualize every mesh axis except ``auto``
+    (left to GSPMD — e.g. the tensor-parallel 'model' axis while the DP
+    gradient reduction runs manually over 'data').
+
+    Replication checking is disabled on every version: the call sites here
+    produce post-``psum`` (replicated-by-construction) outputs that the
+    checker cannot always prove through dtype casts, and 0.4.x rejects
+    ``check_rep=True`` combined with non-empty ``auto``."""
+    mesh = unwrap_mesh(mesh)
+    auto = frozenset(auto)
+    if _NATIVE_SHARD_MAP is not None:
+        params = inspect.signature(_NATIVE_SHARD_MAP).parameters
+        if "axis_names" in params:
+            manual = frozenset(mesh.axis_names) - auto
+            kw = {"axis_names": manual}
+            if "check_vma" in params:
+                kw["check_vma"] = False
+            elif "check_rep" in params:
+                kw["check_rep"] = False
+            return _NATIVE_SHARD_MAP(f, mesh=mesh, in_specs=in_specs,
+                                     out_specs=out_specs, **kw)
+        return _NATIVE_SHARD_MAP(f, mesh=mesh, in_specs=in_specs,
+                                 out_specs=out_specs, check_rep=False,
+                                 auto=auto)
+    return _experimental_shard_map()(f, mesh=mesh, in_specs=in_specs,
+                                     out_specs=out_specs, check_rep=False,
+                                     auto=auto)
+
+
+# ---------------------------------------------------------------------------
 # Compiled-artifact introspection
 # ---------------------------------------------------------------------------
 

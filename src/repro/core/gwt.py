@@ -72,9 +72,13 @@ def gwt(lr: Schedule | float,
         state_dtype=jnp.float32,
         wavelet: str = "haar",
         impl: str = "auto",
-        bucketed: bool = True) -> Optimizer:
+        bucketed: bool = True,
+        state_shardings=None) -> Optimizer:
     """Build the GWT optimizer. ``host`` in {'adam','adam_mini','muon'};
-    ``wavelet`` in {'haar' (paper), 'db2' (beyond-paper Daubechies-4)}."""
+    ``wavelet`` in {'haar' (paper), 'db2' (beyond-paper Daubechies-4)};
+    ``state_shardings`` forwards per-bucket NamedSharding hints (from
+    ``distributed.sharding.gwt_state_shardings(...)['buckets']``) to the
+    engine so init/update keep optimizer state on the mesh layout."""
     if wavelet not in ("haar", "db2"):
         raise ValueError(f"unknown wavelet {wavelet!r}")
     impl = compat.resolve_kernel_impl(impl)
@@ -176,7 +180,7 @@ def gwt(lr: Schedule | float,
 
     return engine.build(
         lambda path, leaf: rules[_leaf_mode(path, leaf, level, elig)],
-        bucketed=bucketed)
+        bucketed=bucketed, state_shardings=state_shardings)
 
 
 # ---------------------------------------------------------------------------

@@ -1,5 +1,6 @@
 """Wavelet-domain gradient compression for data-parallel reduction
-(beyond-paper extension; DESIGN.md §3).
+(beyond-paper extension; DESIGN.md §3 — wired into the executed train
+path by ``models/lm.py:make_train_step(dp_reduce=...)``).
 
 The paper compresses *optimizer states* in the Haar domain.  The same
 frequency split compresses *DP gradient traffic*: all-reduce the
@@ -10,38 +11,159 @@ is detail-band quantization — which the paper's own analysis (Theorem 1:
 detail bands carry the part a low-rank/low-pass approximation would drop)
 argues is the tolerant part of the spectrum.
 
-Wire savings at level l with bf16 details and f32 approximation vs f32
-all-reduce: ``(1/2^l) · 4B + (1 − 1/2^l) · 2B`` vs ``4B`` → 2× at l≥2
-(and ~3.7× with f8 details).
+Wire bytes per element at level l vs the 4B f32 all-reduce:
+``(1/2^l)·4B + (1 − 1/2^l)·detail_bytes`` — 1.6× less at l=2 with bf16
+details (→2× as l grows), 2.29× at l=2 / 3.37× at l=4 with f8 details.
+The ``psum`` runs directly on the wire-dtype arrays, so these ratios
+describe the payload the reduction actually ships; a production f8
+deployment would add per-block scale factors to recover the narrow
+e4m3 exponent range (see ROADMAP).
 
-Implemented with ``shard_map`` + ``lax.psum`` over the DP axis so it
-composes under jit with the rest of the (auto-sharded) step.
+Structure: the wavelet split / quantize (:func:`reduce_terms`) and the
+reconstruction (:func:`reconstruct`) are *pure per-shard math* — property
+tests drive them against an emulated sequential reduction without any
+mesh — while :func:`compressed_psum_mean` is that math wrapped around
+``lax.psum`` inside a ``shard_map``/``pmap`` axis context.
+``detail_dtype=None`` (or ``level == 0``) short-circuits to the exact
+``psum`` mean — the lossless mode of the sharded train path.
 """
 
 from __future__ import annotations
 
+import dataclasses
 import functools
-from typing import Sequence
+from typing import Any, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro.core import haar
 
 
-def compressed_psum_mean(g: jax.Array, axis_name: str, level: int = 2,
+@dataclasses.dataclass(frozen=True)
+class DPReduceSpec:
+    """How the sharded train step reduces gradients over the DP axis.
+
+    * ``level`` — wavelet levels for the split (compression grows with it).
+    * ``detail_dtype`` — dtype the detail bands travel in; ``None`` means
+      no compression: the reduction is one exact f32 ``psum``.
+    """
+
+    level: int = 2
+    detail_dtype: Any = jnp.bfloat16
+
+    @property
+    def exact(self) -> bool:
+        return self.detail_dtype is None or self.level == 0
+
+    @classmethod
+    def parse(cls, mode: str, level: int = 2,
+              detail_dtype: str = "bfloat16") -> Optional["DPReduceSpec"]:
+        """Launcher-flag constructor: ``none`` | ``exact`` | ``compressed``."""
+        if mode in ("", "none"):
+            return None
+        if mode == "exact":
+            return cls(level=level, detail_dtype=None)
+        if mode == "compressed":
+            return cls(level=level, detail_dtype=jnp.dtype(detail_dtype))
+        raise ValueError(f"unknown dp-reduce mode {mode!r}; "
+                         "choices: none|exact|compressed")
+
+
+def compressible(shape: Sequence[int], level: int) -> bool:
+    """Leaves the wavelet split applies to; the rest take the exact-psum
+    fallback (1-D tensors, widths not divisible by the transform block)."""
+    return len(shape) >= 2 and level > 0 and shape[-1] % (1 << level) == 0
+
+
+def reduce_terms(g: jax.Array, level: int, detail_dtype
+                 ) -> Tuple[jax.Array, List[jax.Array]]:
+    """Per-shard wire terms: f32 approximation band + quantized details.
+
+    This is exactly what each worker contributes to the all-reduce — the
+    detail arrays are *in* the wire dtype, and the ``psum`` runs on them
+    as-is, so :func:`tree_wire_bytes` describes the payload the reduction
+    actually moves (XLA's all-reduce may still accumulate wider
+    internally and round once; see ``_psum_like_sum``).  The error of the
+    whole scheme is the quantization applied HERE plus that single
+    accumulation rounding."""
+    a, ds = haar.haar_forward(g.astype(jnp.float32), level)
+    return a, [d.astype(detail_dtype) for d in ds]
+
+
+def reconstruct(a: jax.Array, ds: Sequence[jax.Array], n) -> jax.Array:
+    """Inverse of :func:`reduce_terms` after the cross-worker sum:
+    details widen back to f32 and everything divides by the worker count
+    ``n`` (the summed terms are means after this)."""
+    a = a / n
+    ds = [d.astype(jnp.float32) / n for d in ds]
+    return haar.haar_inverse(a, ds)
+
+
+def compressed_psum_mean(g: jax.Array, axis_name, level: int = 2,
                          detail_dtype=jnp.bfloat16) -> jax.Array:
     """Mean-reduce ``g`` over ``axis_name`` inside shard_map/pmap context,
-    wavelet-split: A_l in f32, D_k in ``detail_dtype``."""
+    wavelet-split: A_l in f32, D_k in ``detail_dtype``.
+
+    ``detail_dtype=None`` (or ``level == 0``) is the EXACT mode: a single
+    f32 ``psum`` — the sharded train path's lossless reduction, bitwise
+    equal to a sequential device-order sum (tests/test_sharded_train.py).
+    Non-compressible leaves always take that exact path."""
     n = jax.lax.psum(1, axis_name)
-    if g.ndim < 2 or g.shape[-1] % (1 << level):
+    if detail_dtype is None or level == 0 or not compressible(g.shape, level):
         return jax.lax.psum(g.astype(jnp.float32), axis_name) / n
-    a, ds = haar.haar_forward(g.astype(jnp.float32), level)
-    a = jax.lax.psum(a, axis_name) / n
-    ds = [jax.lax.psum(d.astype(detail_dtype), axis_name).astype(jnp.float32) / n
-          for d in ds]
-    return haar.haar_inverse(a, ds)
+    a, ds = reduce_terms(g, level, detail_dtype)
+    a = jax.lax.psum(a, axis_name)
+    ds = [jax.lax.psum(d, axis_name) for d in ds]
+    return reconstruct(a, ds, n)
+
+
+@functools.partial(jax.jit, static_argnums=(1, 2))
+def emulated_mean(g_stack: jax.Array, level: int, detail_dtype) -> jax.Array:
+    """Reference semantics of :func:`compressed_psum_mean` on a stacked
+    ``(n_workers, ...)`` array, no mesh required: per-worker terms summed
+    sequentially in worker order — the same order the CPU backend's
+    ``psum`` uses (asserted bitwise in tests/test_sharded_train.py).
+
+    Each worker's payload keeps its leading length-1 axis, exactly what a
+    ``shard_map`` over the stacked dim hands ``compressed_psum_mean`` —
+    so the compressibility decision matches the real path's local view
+    (a ``(D, n)`` stack of 1-D payloads with ``n`` divisible compresses
+    in BOTH, as ``(1, n)`` blocks).  Jitted (static ``level``/
+    ``detail_dtype``): the bitwise contract holds for the compiled
+    pipeline; eagerly dispatched ops fuse differently and drift an f32
+    ulp.
+
+    Bitwise for the exact and bf16 modes; for f8 payloads the backend's
+    all-reduce accumulation strategy is buffer-size-dependent, so the
+    match is within one f8 detail ulp instead (the train path's bitwise
+    guarantees only ever ride the EXACT mode — compressed modes carry
+    error bounds, not bit contracts)."""
+    n = g_stack.shape[0]
+    local_shape = (1,) + tuple(g_stack.shape[1:])
+    if detail_dtype is None or level == 0 \
+            or not compressible(local_shape, level):
+        return _psum_like_sum(g_stack.astype(jnp.float32)) / n
+    terms = [reduce_terms(g_stack[i:i + 1], level, detail_dtype)
+             for i in range(n)]
+    a = _psum_like_sum(jnp.stack([t[0] for t in terms]))
+    ds = [_psum_like_sum(jnp.stack([t[1][k] for t in terms]))
+          for k in range(len(terms[0][1]))]
+    return reconstruct(a, ds, n)[0]
+
+
+def _psum_like_sum(stack: jax.Array) -> jax.Array:
+    """``psum`` semantics on the CPU backend, observed and pinned by
+    tests/test_sharded_train.py: accumulate in f32 in worker order
+    (sequential, not ``jnp.sum``'s tree), round ONCE to the input dtype —
+    sub-f32 payloads are NOT re-rounded per partial sum."""
+    def body(acc, x):
+        return acc + x, None
+    acc, _ = jax.lax.scan(body, jnp.zeros(stack.shape[1:], jnp.float32),
+                          stack.astype(jnp.float32))
+    return acc.astype(stack.dtype)
 
 
 def make_compressed_grad_reducer(mesh, axis: str = "data", level: int = 2,
@@ -52,16 +174,14 @@ def make_compressed_grad_reducer(mesh, axis: str = "data", level: int = 2,
     replicated over every mesh axis except ``axis`` (pure-DP layout).
     Returns a jit-compatible callable.
     """
-    from jax.experimental.shard_map import shard_map
-    from repro import compat
     mesh = compat.unwrap_mesh(mesh)
 
     def reduce_tree(grads):
         def one(g):
-            fn = shard_map(
+            fn = compat.shard_map(
                 functools.partial(compressed_psum_mean, axis_name=axis,
                                   level=level, detail_dtype=detail_dtype),
-                mesh=mesh,
+                mesh,
                 in_specs=P(axis, *([None] * (g.ndim - 1))),
                 out_specs=P(axis, *([None] * (g.ndim - 1))),
             )
@@ -77,3 +197,17 @@ def wire_bytes(num_elements: int, level: int, detail_bytes: int = 2,
     approx = num_elements >> level
     detail = num_elements - approx
     return 2 * (approx * approx_bytes + detail * detail_bytes)
+
+
+def tree_wire_bytes(grads_abstract, dp: Optional[DPReduceSpec]) -> int:
+    """Per-worker DP all-reduce wire bytes for a whole gradient tree under
+    ``dp`` (``None`` or exact → full-f32 accounting).  Non-compressible
+    leaves ride the exact psum and are charged at full f32 either way."""
+    total = 0
+    for leaf in jax.tree.leaves(grads_abstract):
+        if dp is None or dp.exact or not compressible(leaf.shape, dp.level):
+            total += wire_bytes(leaf.size, 0)
+        else:
+            total += wire_bytes(leaf.size, dp.level,
+                                detail_bytes=jnp.dtype(dp.detail_dtype).itemsize)
+    return total

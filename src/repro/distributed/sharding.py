@@ -17,7 +17,7 @@ dim is replicated.  This resolves, automatically:
 from __future__ import annotations
 
 import math
-from typing import Any, Dict, Optional, Sequence, Tuple, Union
+from typing import Any, Dict, NamedTuple, Optional, Sequence, Tuple, Union
 
 import jax
 from jax.sharding import NamedSharding, PartitionSpec as P
@@ -88,6 +88,11 @@ def spec_for(shape: Sequence[int], axes: Axes, mesh, rules: Rules) -> P:
             for cand in rules.get(name, ()):
                 cand_names = (cand,) if isinstance(cand, str) else tuple(cand)
                 if not cand_names:
+                    continue
+                # a rule may name an axis the mesh doesn't have (e.g. the
+                # 'model' candidates on a pure-DP '--mesh 8' launch): fall
+                # through to the next candidate / replication
+                if any(a not in mesh.shape for a in cand_names):
                     continue
                 if any(a in used for a in cand_names):
                     continue
@@ -174,6 +179,53 @@ def gwt_state_shardings(params_abstract, params_axes, mesh, rules: Rules,
                 host_sh = {"m": sh}
             bucket_shardings[b.name] = {"host": host_sh, "prev_norm": rep}
     return {"step": rep, "buckets": bucket_shardings}
+
+
+class StepShardings(NamedTuple):
+    """The three sharding trees the mesh-aware train step pins: params,
+    optimizer state, and input batch (NamedSharding leaves; ``opt`` may be
+    ``None`` when no per-bucket layout is known for the optimizer)."""
+
+    params: Any
+    opt: Any
+    batch: Dict[str, Any]
+
+
+def replicated_like(tree, mesh):
+    """A fully-replicated NamedSharding tree shaped like ``tree`` — the
+    classic-DP layout (``--shard-params none``)."""
+    mesh = compat.unwrap_mesh(mesh)
+    rep = NamedSharding(mesh, P())
+    return jax.tree.map(lambda _: rep, tree)
+
+
+def train_step_shardings(cfg, mod, batch_abstract, mesh, *,
+                         optimizer_name: str = "gwt", level: int = 2,
+                         host: str = "adam", eligible=None,
+                         shard_params: bool = True) -> StepShardings:
+    """One-stop sharding-tree builder for the sharded train path
+    (launch/train.py, benchmarks, tests).
+
+    ``shard_params=True`` applies :func:`train_rules` (FSDP over 'data',
+    TP over 'model' where present) to params and — for the GWT optimizer —
+    the mirrored per-bucket layout to optimizer state.  ``False`` pins
+    everything replicated (pure DP; the numerics-preserving layout the
+    bitwise topology-equivalence tier runs under).  Batch inputs always
+    shard over the DP axes."""
+    mesh = compat.unwrap_mesh(mesh)
+    params_abs = mod.abstract_params(cfg)
+    batch_sh = batch_shardings(batch_abstract, mesh)
+    if not shard_params:
+        return StepShardings(replicated_like(params_abs, mesh),
+                             None, batch_sh)
+    rules = train_rules(mesh)
+    params_axes = mod.param_axes(cfg)
+    params_sh = tree_shardings(params_abs, params_axes, mesh, rules)
+    opt_sh = None
+    if optimizer_name == "gwt":
+        opt_sh = gwt_state_shardings(params_abs, params_axes, mesh, rules,
+                                     level, eligible=eligible, host=host)
+    return StepShardings(params_sh, opt_sh, batch_sh)
 
 
 def batch_shardings(batch_abstract: Dict[str, Any], mesh):

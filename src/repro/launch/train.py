@@ -4,6 +4,16 @@
         --optimizer gwt --level 2 --steps 200 --batch 16 --seq 256 \
         --ckpt-dir /tmp/ckpt [--resume] [--data bytes]
 
+Distributed (mesh-aware) training — the sharded path of DESIGN.md §3:
+
+    python -m repro.launch.train ... --mesh 8 --dp-reduce compressed \
+        --dp-level 2 [--dp-detail-dtype bfloat16] [--shard-params auto]
+
+``--dp-reduce`` routes the data-parallel gradient reduction through
+``shard_map`` + ``compressed_psum_mean`` (exact f32 psum or wavelet-
+compressed wire format); ``--shard-params auto`` additionally pins
+params/optimizer state to the FSDP/TP rule table.
+
 On a real TPU pod this runs under ``jax.distributed.initialize()`` with the
 production mesh; in the CPU container it runs single-device (or multi-device
 via XLA_FLAGS) with the same code path.  Fault tolerance: SIGTERM →
@@ -20,6 +30,7 @@ import jax
 from repro import configs, optim
 from repro.checkpoint.manager import CheckpointManager
 from repro.data.pipeline import make_source
+from repro.distributed.compression import DPReduceSpec
 from repro.launch.mesh import make_mesh_context
 from repro.models import encdec, lm
 from repro.optim.schedules import warmup_cosine
@@ -57,13 +68,44 @@ def main(argv=None):
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--mesh", default="",
                     help="elastic mesh, e.g. '4x2' over (data, model); "
-                         "empty = single device")
+                         "empty = single device (or all devices over "
+                         "'data' when --dp-reduce is set)")
+    ap.add_argument("--dp-reduce", default="none",
+                    choices=["none", "exact", "compressed"],
+                    help="mesh-aware DP gradient reduction: 'exact' = f32 "
+                         "psum inside shard_map, 'compressed' = wavelet "
+                         "split (f32 approximation band, --dp-detail-dtype "
+                         "details); 'none' keeps the auto-sharded step")
+    ap.add_argument("--dp-level", type=int, default=2,
+                    help="wavelet levels for --dp-reduce compressed "
+                         "(wire bytes ~ 1/2^l f32 + (1-1/2^l) detail)")
+    ap.add_argument("--dp-detail-dtype", default="bfloat16",
+                    choices=["bfloat16", "float16", "float8_e4m3fn"],
+                    help="detail-band wire dtype for --dp-reduce "
+                         "compressed (the psum ships this dtype)")
+    ap.add_argument("--shard-params", default="auto",
+                    choices=["auto", "none"],
+                    help="with --dp-reduce only (no effect otherwise — "
+                         "plain mesh runs stay GSPMD-auto-sharded): "
+                         "'auto' pins params/opt-state to the FSDP rule "
+                         "table, 'none' keeps them replicated (classic "
+                         "DP — the layout whose numerics are independent "
+                         "of device count)")
+    ap.add_argument("--no-donate", action="store_true",
+                    help="keep (params, opt_state) undonated in the "
+                         "pipelined loop.  Donation changes XLA's fusion "
+                         "(and hence float rounding) per topology, so "
+                         "cross-device-count bitwise reproducibility "
+                         "requires it off; same-topology runs are "
+                         "deterministic either way")
     ap.add_argument("--kernel-impl", default="auto",
                     choices=["auto", "pallas", "interpret", "jnp"],
                     help="fused-kernel backend (auto: pallas on TPU, "
                          "jnp elsewhere; REPRO_KERNEL_IMPL also works)")
     args = ap.parse_args(argv)
 
+    dp_spec = DPReduceSpec.parse(args.dp_reduce, args.dp_level,
+                                 args.dp_detail_dtype)
     if args.mesh:
         try:
             shape = tuple(int(s) for s in args.mesh.lower().split("x"))
@@ -76,8 +118,17 @@ def main(argv=None):
         axes = (("data",), ("data", "model"),
                 ("pod", "data", "model"))[len(shape) - 1]
         ctx = make_mesh_context(shape, axes, kernel_impl=args.kernel_impl)
+    elif dp_spec is not None:
+        # mesh-aware reduction without an explicit shape: all devices DP
+        ctx = make_mesh_context((jax.device_count(),), ("data",),
+                                kernel_impl=args.kernel_impl)
     else:
         ctx = make_mesh_context(kernel_impl=args.kernel_impl)
+    if dp_spec is not None and ctx.auto_axis_names:
+        ap.error(f"--dp-reduce {args.dp_reduce} needs a pure-DP mesh "
+                 f"(single-axis '--mesh 8'), not {args.mesh!r}: the "
+                 f"manual DP reduction cannot leave {ctx.auto_axis_names} "
+                 f"to GSPMD on this JAX — drop --dp-reduce for TP meshes")
 
     cfg = (configs.get_smoke(args.arch) if args.smoke
            else configs.get_config(args.arch))
@@ -85,22 +136,6 @@ def main(argv=None):
     key = jax.random.key(args.seed)
     params = mod.init(cfg, key)
     n_params = sum(x.size for x in jax.tree.leaves(params))
-
-    opt_kw = {}
-    if args.optimizer == "gwt":
-        opt_kw = {"level": args.level, "alpha": args.alpha, "host": args.host,
-                  "impl": ctx.kernel_impl}
-    elif args.optimizer in ("galore", "apollo", "fira"):
-        opt_kw = {"rank_frac": 0.25, "alpha": args.alpha}
-    optimizer = make_optimizer(args.optimizer, args.lr, args.steps, **opt_kw)
-    opt_state = optimizer.init(params)
-
-    # Exact accounting for the *actual* optimizer/host (eval_shape over the
-    # real init — no Adam-shaped approximation for non-GWT runs).
-    from repro.optim.engine import state_bytes
-    mem_bytes = state_bytes(optimizer, params)
-    print(f"arch={cfg.name} params={n_params/1e6:.1f}M "
-          f"optimizer={args.optimizer} opt_state={mem_bytes/2**20:.1f}MiB")
 
     # Encoder-decoder batches carry the audio-frontend frame stub; the
     # adapter lives in the pipeline (WithEncoderFrames), not a monkey-patch.
@@ -110,17 +145,71 @@ def main(argv=None):
                          enc_frames=args.seq // 4 if enc else 0,
                          enc_dim=cfg.d_model if enc else 0)
 
+    # Mesh mode: build the three sharding trees once (params, opt state,
+    # batch) and hand the GWT engine its per-bucket hints before init.
+    shardings = None
+    if dp_spec is not None:
+        from repro.distributed import sharding as shr
+        b0 = source.batch(0)
+        batch_abs = {k: jax.ShapeDtypeStruct(v.shape, v.dtype)
+                     for k, v in b0.items()}
+        shardings = shr.train_step_shardings(
+            cfg, mod, batch_abs, ctx.mesh, optimizer_name=args.optimizer,
+            level=args.level, host=args.host,
+            shard_params=args.shard_params == "auto")
+
+    opt_kw = {}
+    if args.optimizer == "gwt":
+        opt_kw = {"level": args.level, "alpha": args.alpha, "host": args.host,
+                  "impl": ctx.kernel_impl}
+        if shardings is not None and shardings.opt is not None:
+            opt_kw["state_shardings"] = shardings.opt["buckets"]
+    elif args.optimizer in ("galore", "apollo", "fira"):
+        opt_kw = {"rank_frac": 0.25, "alpha": args.alpha}
+    optimizer = make_optimizer(args.optimizer, args.lr, args.steps, **opt_kw)
+
+    opt_shardings = None
+    if shardings is not None:
+        from repro.distributed.sharding import replicated_like
+        params = jax.device_put(params, shardings.params)
+        opt_shardings = shardings.opt if shardings.opt is not None else \
+            replicated_like(jax.eval_shape(optimizer.init, params), ctx.mesh)
+    with ctx.activate():
+        opt_state = optimizer.init(params)
+    if opt_shardings is not None:
+        opt_state = jax.device_put(opt_state, opt_shardings)
+
+    # Exact accounting for the *actual* optimizer/host (eval_shape over the
+    # real init — no Adam-shaped approximation for non-GWT runs).
+    from repro.optim.engine import state_bytes
+    mem_bytes = state_bytes(optimizer, params)
+    print(f"arch={cfg.name} params={n_params/1e6:.1f}M "
+          f"optimizer={args.optimizer} opt_state={mem_bytes/2**20:.1f}MiB")
+    if dp_spec is not None:
+        from repro.distributed.compression import tree_wire_bytes
+        grads_abs = jax.tree.map(
+            lambda p: jax.ShapeDtypeStruct(p.shape, p.dtype), params)
+        full = tree_wire_bytes(grads_abs, None)
+        now = tree_wire_bytes(grads_abs, dp_spec)
+        print(f"dp_reduce={args.dp_reduce} dp={ctx.dp_size} "
+              f"wire={now/2**20:.1f}MiB/step vs exact {full/2**20:.1f}MiB "
+              f"({full/now:.2f}x)")
+
     # Raw (un-jitted) step: TrainLoop compiles it inside its donated
     # scan-over-chunk superstep (runtime/fault_tolerance.py).
     train_step = mod.make_train_step(cfg, optimizer, accum_steps=args.accum,
-                                     ctx=ctx)
+                                     ctx=ctx, dp_reduce=dp_spec,
+                                     shardings=shardings)
     ckpt = CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
     start = 0
     if args.resume and ckpt is not None and ckpt.latest_step() is not None:
         from repro.checkpoint.manager import StructureMismatch
+        restore_sh = None if shardings is None else \
+            {"params": shardings.params, "opt": opt_shardings}
         try:
             (state, start) = ckpt.restore(None, {"params": params,
-                                                 "opt": opt_state}, ctx=ctx)
+                                                 "opt": opt_state},
+                                          shardings=restore_sh, ctx=ctx)
         except StructureMismatch as e:
             # Only a pre-engine checkpoint (per-leaf tuple optimizer state,
             # "'leaves'" in its treedef) gets the migration path; a
@@ -142,7 +231,10 @@ def main(argv=None):
         print(f"resumed from step {start}")
 
     loop = TrainLoop(train_step, ckpt, source, ckpt_every=args.ckpt_every,
-                     log_every=args.log_every, save_final=ckpt is not None)
+                     log_every=args.log_every, save_final=ckpt is not None,
+                     donate=not args.no_donate,
+                     batch_shardings=None if shardings is None
+                     else shardings.batch)
     with ctx.activate():
         params, opt_state, losses = loop.run(params, opt_state,
                                              start_step=start,

@@ -172,10 +172,22 @@ def loss_fn(cfg, params, batch, ctx: MeshContext = None) -> jax.Array:
 
 
 def make_train_step(cfg, optimizer, accum_steps: int = 1,
-                    ctx: MeshContext = None, donate: bool = False):
+                    ctx: MeshContext = None, donate: bool = False,
+                    dp_reduce=None, shardings=None):
     """``donate=True`` jits with ``donate_argnums=(0, 1)`` — same
-    single-buffered params/opt-state contract as ``lm.make_train_step``."""
-    from repro.models.lm import microbatch_split
+    single-buffered params/opt-state contract as ``lm.make_train_step``;
+    ``dp_reduce`` switches to the mesh-aware sharded path (shard_map DP
+    gradient reduction — see ``lm.make_sharded_train_step``) with this
+    module's encoder-decoder loss."""
+    from repro.models.lm import make_sharded_train_step, microbatch_split
+    if isinstance(dp_reduce, str):
+        from repro.distributed.compression import DPReduceSpec
+        dp_reduce = DPReduceSpec.parse(dp_reduce)  # 'none' -> None
+    if dp_reduce is not None:
+        return make_sharded_train_step(cfg, optimizer, loss_fn, ctx=ctx,
+                                       dp_reduce=dp_reduce,
+                                       accum_steps=accum_steps,
+                                       shardings=shardings, donate=donate)
 
     def train_step(params, opt_state, batch):
         c = ctx if ctx is not None else MeshContext.ambient()

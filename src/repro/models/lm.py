@@ -346,11 +346,164 @@ def microbatch_split(batch: Dict[str, jax.Array], accum: int,
     return out
 
 
+def _contiguous_microbatches(batch: Dict[str, jax.Array], accum: int
+                             ) -> Dict[str, jax.Array]:
+    """Split a (device-local) batch into ``accum`` CONTIGUOUS row blocks:
+    ``(B,) -> (accum, B/accum)``.  Inside ``shard_map`` the data is already
+    local, so — unlike :func:`microbatch_split`'s strided shard-preserving
+    layout — contiguity costs nothing, and it is what makes the logical
+    shard grid independent of the device count: shard ``s`` always holds
+    global rows ``[s·B/S, (s+1)·B/S)`` whether ``s`` indexes a device, an
+    accumulation step, or a mix."""
+    out = {}
+    for k, v in batch.items():
+        if k == "mrope_positions":                   # (3, B, S): batch dim 1
+            if v.shape[1] % accum:
+                raise ValueError(f"local batch {v.shape[1]} not divisible "
+                                 f"by accum_steps={accum}")
+            mb = v.shape[1] // accum
+            out[k] = v.reshape(3, accum, mb, v.shape[2]).transpose(1, 0, 2, 3)
+        else:                                        # (B, ...)
+            if v.shape[0] % accum:
+                raise ValueError(f"local batch {v.shape[0]} not divisible "
+                                 f"by accum_steps={accum}")
+            mb = v.shape[0] // accum
+            out[k] = v.reshape(accum, mb, *v.shape[1:])
+    return out
+
+
+def make_sharded_train_step(cfg, optimizer, loss, *, ctx: MeshContext,
+                            dp_reduce, accum_steps: int = 1, shardings=None,
+                            donate: bool = False):
+    """Mesh-aware train step: the data-parallel gradient reduction runs
+    *manually* — per-device gradients inside ``shard_map`` over the DP
+    axes, reduced by :func:`repro.distributed.compression
+    .compressed_psum_mean` (exact f32 ``psum`` when
+    ``dp_reduce.detail_dtype is None``; wavelet-compressed otherwise).
+    Everything outside the shard_map (optimizer update, constraint
+    pinning) stays under GSPMD; a 'model' axis, if present, is left to
+    GSPMD *inside* too (shard_map auto axes), so TP composes.
+
+    Numerics contract: the gradient is the mean over ``dp_size ×
+    accum_steps`` contiguous logical shards, per-shard grads summed
+    shard-order-sequentially (the accumulation scan within a device, the
+    device-order ``psum`` across).  Because the CPU/TPU all-reduce sums in
+    device order, a run on D devices with accum A is *bitwise* equal to a
+    run on 1 device with accum D·A when A == 1 — the topology-equivalence
+    tier in tests/test_sharded_train.py pins exactly that.
+
+    ``shardings`` (a :class:`repro.distributed.sharding.StepShardings`)
+    pins inputs and outputs: batch to its DP layout, params/opt_state to
+    the FSDP layout (or replicated).  ``donate=True`` jits with
+    ``donate_argnums=(0, 1)`` exactly like the auto-sharded step.
+
+    Pure-DP meshes only: leaving a TP 'model' axis to GSPMD as a
+    shard_map *auto* axis miscompiles on the pinned jax/XLA 0.4.x (hard
+    ``IsManualSubgroup`` check abort in hlo_sharding_util once the real
+    model graph is inside) — rejected here with a real error instead.
+    TP meshes keep the auto-sharded step (``dp_reduce=None``).
+    """
+    from repro.distributed import compression
+    if isinstance(dp_reduce, str):
+        dp_reduce = compression.DPReduceSpec.parse(dp_reduce)
+    if dp_reduce is None:
+        raise ValueError("dp_reduce None/'none' means the auto-sharded "
+                         "step — call make_train_step, which routes here "
+                         "only for a real DPReduceSpec")
+    if ctx is None or ctx.mesh is None or not ctx.dp_axis_names:
+        raise ValueError("make_sharded_train_step needs a MeshContext with "
+                         "a 'data' axis (use make_mesh_context)")
+    if ctx.auto_axis_names:
+        raise ValueError(
+            f"dp_reduce needs a pure-DP mesh (('data',) or ('pod', "
+            f"'data')), got axes {ctx.axis_names}: leaving "
+            f"{ctx.auto_axis_names} to GSPMD inside shard_map trips an "
+            f"XLA manual-subgroup check on the pinned jax 0.4.x — use "
+            f"dp_reduce=None (auto-sharded step) for TP meshes")
+    dp_axes = ctx.dp_axis_names
+    axis = dp_axes if len(dp_axes) > 1 else dp_axes[0]
+    dp_size = ctx.dp_size
+    # inside the manual region every sharding constraint must be a no-op:
+    # hand the forward a mesh-less context instead of letting wsc degrade
+    inner_ctx = MeshContext(mesh=None, kernel_impl=ctx.kernel_impl)
+
+    def batch_spec(k: str, v) -> jax.sharding.PartitionSpec:
+        bdim = 1 if k == "mrope_positions" else 0
+        spec = [None] * v.ndim
+        spec[bdim] = axis
+        return jax.sharding.PartitionSpec(*spec)
+
+    def local_grads(params, lbatch):
+        micro = _contiguous_microbatches(lbatch, accum_steps)
+
+        def body(carry, mb):
+            gsum, lsum = carry
+            l, g = jax.value_and_grad(
+                lambda p: loss(cfg, p, mb, ctx=inner_ctx))(params)
+            gsum = jax.tree.map(lambda a, b: a + b.astype(jnp.float32),
+                                gsum, g)
+            return (gsum, lsum + l), None
+
+        g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (gsum, lsum), _ = jax.lax.scan(body, (g0, jnp.zeros(())), micro)
+        gmean = jax.tree.map(lambda a: a / accum_steps, gsum)
+        grads = jax.tree.map(
+            functools.partial(compression.compressed_psum_mean,
+                              axis_name=axis, level=dp_reduce.level,
+                              detail_dtype=dp_reduce.detail_dtype), gmean)
+        lmean = jax.lax.psum(lsum / accum_steps, axis) / dp_size
+        return grads, lmean
+
+    def train_step(params, opt_state, batch):
+        if shardings is not None:
+            params = jax.tree.map(jax.lax.with_sharding_constraint,
+                                  params, shardings.params)
+            if shardings.opt is not None:
+                opt_state = jax.tree.map(jax.lax.with_sharding_constraint,
+                                         opt_state, shardings.opt)
+            batch = {k: jax.lax.with_sharding_constraint(v,
+                                                         shardings.batch[k])
+                     for k, v in batch.items()}
+        from repro import compat
+        fn = compat.shard_map(
+            local_grads, ctx.mesh,
+            in_specs=(jax.tree.map(lambda _: jax.sharding.PartitionSpec(),
+                                   params),
+                      {k: batch_spec(k, v) for k, v in batch.items()}),
+            out_specs=(jax.tree.map(lambda _: jax.sharding.PartitionSpec(),
+                                    params),
+                       jax.sharding.PartitionSpec()))
+        grads, loss_mean = fn(params, batch)
+        grads = jax.tree.map(lambda g: g.astype(cfg.dtype), grads)
+        if shardings is not None:
+            # pin the (replicated) reduced grads to the parameter layout so
+            # the update partitions like the state it writes
+            grads = jax.tree.map(jax.lax.with_sharding_constraint,
+                                 grads, shardings.params)
+        new_params, new_opt = optimizer.update(grads, opt_state, params)
+        if shardings is not None:
+            new_params = jax.tree.map(jax.lax.with_sharding_constraint,
+                                      new_params, shardings.params)
+            if shardings.opt is not None:
+                new_opt = jax.tree.map(jax.lax.with_sharding_constraint,
+                                       new_opt, shardings.opt)
+        return new_params, new_opt, {"loss": loss_mean}
+
+    if donate:
+        return jax.jit(train_step, donate_argnums=(0, 1))
+    return train_step
+
+
 def make_train_step(cfg, optimizer, accum_steps: int = 1,
                     grad_shardings=None, ctx: MeshContext = None,
-                    donate: bool = False):
+                    donate: bool = False, dp_reduce=None, shardings=None):
     """Gradient-accumulated train step: ``batch`` is the GLOBAL batch; a
     shard-preserving reshape feeds a microbatch ``lax.scan``.
+
+    ``dp_reduce`` (a ``repro.distributed.compression.DPReduceSpec`` or
+    ``'exact'`` / ``'compressed'``) switches to the mesh-aware sharded
+    path — see :func:`make_sharded_train_step`; ``shardings`` rides along
+    to pin params/opt_state/batch placement.
 
     ``grad_shardings`` (optional NamedSharding tree like params): pins each
     microbatch's bf16 gradients to the parameter sharding *before* the f32
@@ -366,6 +519,14 @@ def make_train_step(cfg, optimizer, accum_steps: int = 1,
     arrays it passes in.  ``donate=False`` keeps the historical behaviour
     of returning the raw traceable function.
     """
+    if isinstance(dp_reduce, str):
+        from repro.distributed.compression import DPReduceSpec
+        dp_reduce = DPReduceSpec.parse(dp_reduce)  # 'none' -> None
+    if dp_reduce is not None:
+        return make_sharded_train_step(cfg, optimizer, loss_fn, ctx=ctx,
+                                       dp_reduce=dp_reduce,
+                                       accum_steps=accum_steps,
+                                       shardings=shardings, donate=donate)
 
     def train_step(params, opt_state, batch):
         # resolve the ambient fallback at trace time, not build time: the

@@ -162,21 +162,53 @@ class Engine:
         return {"step": state["step"], "leaves": tuple(per_leaf)}
 
 
+def _constrain_bucket(state, sharding_tree):
+    """Pin one bucket's stacked state to its NamedSharding tree (a
+    per-bucket hint from ``distributed.sharding.gwt_state_shardings``).
+    Works eagerly, under ``jit``, and under ``eval_shape`` — NamedSharding
+    leaves carry their own mesh, so no ambient context is needed.  A hint
+    that doesn't fit the state — wrong structure (stale optimizer config,
+    wrong dict level) or shape-incompatible specs — is a caller bug and
+    raises rather than silently skipping placement."""
+    if sharding_tree is None:
+        return state
+    if (jax.tree_util.tree_structure(state)
+            != jax.tree_util.tree_structure(sharding_tree)):
+        raise ValueError(
+            f"state_shardings hint structure "
+            f"{jax.tree_util.tree_structure(sharding_tree)} does not match "
+            f"bucket state {jax.tree_util.tree_structure(state)} — pass "
+            f"gwt_state_shardings(...)['buckets'] for the SAME "
+            f"level/host/eligible configuration")
+    return jax.tree_util.tree_map(jax.lax.with_sharding_constraint,
+                                  state, sharding_tree)
+
+
 def build(assign: Callable[[str, Any], LeafRule],
-          bucketed: bool = True) -> Optimizer:
+          bucketed: bool = True, state_shardings=None) -> Optimizer:
     """Build an :class:`Optimizer` from a leaf-rule assignment.
 
     ``bucketed=True`` (default) executes one scan / vectorized kernel call
     per bucket; ``bucketed=False`` unrolls leaf-by-leaf (the pre-engine
     reference semantics — same state layout, used in equivalence tests).
+
+    ``state_shardings`` — optional per-bucket sharding hints: a dict
+    ``{bucket_name: NamedSharding tree}`` (the ``"buckets"`` entry of
+    ``distributed.sharding.gwt_state_shardings``).  ``init`` places each
+    bucket's stacked state on its hinted layout and ``update`` re-pins the
+    new state, so the sharded train path never round-trips optimizer
+    state through an unconstrained (GSPMD's-choice) layout.
     """
     eng = Engine(assign, bucketed)
+    hints = state_shardings or {}
 
     def init(params):
         plan = eng.plan(params)
         _, leaves, _ = flatten_with_paths(params)
         buckets = {
-            b.name: _stack_states([b.rule.init(leaves[i]) for i in b.indices])
+            b.name: _constrain_bucket(
+                _stack_states([b.rule.init(leaves[i]) for i in b.indices]),
+                hints.get(b.name))
             for b in plan.buckets}
         return {"step": jnp.zeros((), jnp.int32), "buckets": buckets}
 
@@ -208,7 +240,7 @@ def build(assign: Callable[[str, Any], LeafRule],
                         return None, rule.update(g, p, s, step, lid)
                     _, (np_stk, ns) = jax.lax.scan(
                         body, None, (g_stk, p_stk, st, lids))
-            new_buckets[b.name] = ns
+            new_buckets[b.name] = _constrain_bucket(ns, hints.get(b.name))
             for j, i in enumerate(b.indices):
                 new_leaves[i] = np_stk[j]
         return (jax.tree_util.tree_unflatten(treedef, new_leaves),

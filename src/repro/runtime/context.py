@@ -62,6 +62,25 @@ class MeshContext:
             return 0
         return int(self.mesh.shape[name])
 
+    @property
+    def dp_axis_names(self) -> Tuple[str, ...]:
+        """Mesh axes carrying data parallelism, in reduction order
+        (('pod', 'data'), ('data',), or () without a mesh)."""
+        return tuple(a for a in ("pod", "data") if a in self.axis_names)
+
+    @property
+    def dp_size(self) -> int:
+        """Total data-parallel degree (1 without a mesh)."""
+        return math.prod(self.axis_size(a) for a in self.dp_axis_names) \
+            if self.dp_axis_names else 1
+
+    @property
+    def auto_axis_names(self) -> Tuple[str, ...]:
+        """Mesh axes left to GSPMD when the DP axes run manually under
+        ``shard_map`` (the TP 'model' axis)."""
+        dp = set(self.dp_axis_names)
+        return tuple(a for a in self.axis_names if a not in dp)
+
     def dp_axes(self, nbatch: int) -> Optional[Union[str, Tuple[str, ...]]]:
         """DP mesh axes that divide ``nbatch`` (or None).
 

@@ -145,7 +145,8 @@ class TrainLoop:
                  ckpt_every: int = 100, log_every: int = 10,
                  log: Callable[[str], None] = print,
                  pipelined: bool = True, donate: bool = True,
-                 max_chunk: int = 16, save_final: bool = False):
+                 max_chunk: int = 16, save_final: bool = False,
+                 batch_shardings=None):
         self.train_step = train_step
         self.ckpt = ckpt
         self.data = data_source
@@ -156,6 +157,12 @@ class TrainLoop:
         self.donate = donate
         self.max_chunk = max(int(max_chunk), 1)
         self.save_final = save_final
+        # per-batch NamedSharding dict (the mesh-aware step's input
+        # layout): host chunks are device_put straight onto the DP shards
+        # — one H2D per device instead of a replicated upload that the
+        # first sharding constraint immediately re-slices.
+        self.batch_shardings = batch_shardings
+        self._chunk_shardings = None  # leading scan axis added lazily
         self.watchdog = StepWatchdog(log=log)
         self.preempt = PreemptionHandler()
         self._superstep = None  # built lazily, reused across run() calls
@@ -178,6 +185,22 @@ class TrainLoop:
         self._grid = g
 
     # -- pipelined machinery -----------------------------------------------
+    def _place(self, key: str, stacked):
+        """Host (k, B, ...) chunk -> device.  With ``batch_shardings`` the
+        chunk lands pre-sharded: the per-batch spec gains a replicated
+        leading scan axis (every device sees every chunk index, only its
+        own batch rows)."""
+        import jax
+        import jax.numpy as jnp
+        if self.batch_shardings is None or key not in self.batch_shardings:
+            return jnp.asarray(stacked)
+        if self._chunk_shardings is None:
+            from jax.sharding import NamedSharding, PartitionSpec as P
+            self._chunk_shardings = {
+                kk: NamedSharding(sh.mesh, P(None, *sh.spec))
+                for kk, sh in self.batch_shardings.items()}
+        return jax.device_put(stacked, self._chunk_shardings[key])
+
     def _build_superstep(self):
         import jax
         train_step = self.train_step
@@ -272,7 +295,7 @@ class TrainLoop:
                         raise RuntimeError(f"data stream desync: got batch "
                                            f"{i}, want {step + j}")
                     batches.append(b)
-                chunk = {kk: jnp.asarray(v)
+                chunk = {kk: self._place(kk, v)
                          for kk, v in stack_batches(batches).items()}
                 self.watchdog.start()
                 params, opt_state, lchunk = self._superstep(params, opt_state,

@@ -1,6 +1,9 @@
-"""Test fixtures.  NOTE: no XLA_FLAGS here — unit tests must see the real
-single CPU device; multi-device tests spawn subprocesses with their own
-XLA_FLAGS (see test_distributed.py).
+"""Test fixtures + shared multi-device / property-test machinery.
+
+NOTE: no XLA_FLAGS here — unit tests must see the real single CPU device;
+multi-device tests run their code in subprocesses via
+:func:`run_in_devices`, which owns the ``XLA_FLAGS`` fake-device request
+(previously copy-pasted per test file).
 
 Backend-sweep tier (ROADMAP multi-backend item): the ``kernel_impl``
 fixture parametrizes kernel/engine equivalence tests over
@@ -11,8 +14,82 @@ needs TPU hardware and is covered by the same entry points via
 ``REPRO_KERNEL_IMPL`` once available).
 """
 
+import itertools
+import os
+import subprocess
+import sys
+import textwrap
+
 import jax
 import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def device_env(n: int, **extra) -> dict:
+    """Subprocess environment seeing ``n`` simulated host-platform CPU
+    devices: ``PYTHONPATH=src``, CPU platform pinned, inherited
+    ``XLA_FLAGS`` dropped (the fake-device request must be THIS process's
+    choice, not leakage).  The single shared recipe behind
+    :func:`run_in_devices` and the launcher-driving tests."""
+    env = dict(os.environ, PYTHONPATH="src", JAX_PLATFORMS="cpu")
+    env.pop("XLA_FLAGS", None)
+    if n > 1:
+        env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n}"
+    env.update(extra)
+    return env
+
+
+def run_in_devices(n: int, code: str, timeout: int = 560, env=None):
+    """Run ``code`` in a subprocess that sees ``n`` simulated host-platform
+    CPU devices (its own ``XLA_FLAGS``; the calling test process keeps its
+    single real device).  ``code`` is dedented; cwd is the repo root with
+    ``PYTHONPATH=src``.  Returns the ``CompletedProcess`` — asserting on
+    a sentinel in ``r.stdout`` is the caller's job (include
+    ``r.stdout + r.stderr`` in the assert message for debuggability)."""
+    return subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                          capture_output=True, text=True, cwd=REPO,
+                          env=device_env(n, **(env or {})), timeout=timeout)
+
+
+# ---------------------------------------------------------------------------
+# hypothesis with a deterministic fallback: property tests run everywhere,
+# with full random draws where hypothesis is installed (requirements-dev)
+# and a fixed sample grid (endpoints + midpoint per strategy) without it.
+# Import as ``from conftest import given, settings, st``.
+# ---------------------------------------------------------------------------
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+except ImportError:
+    class _IntRange:
+        def __init__(self, lo, hi):
+            self.lo, self.hi = lo, hi
+
+        def samples(self):
+            return sorted({self.lo, (self.lo + self.hi) // 2, self.hi})
+
+    class _FloatRange(_IntRange):
+        def samples(self):
+            return [self.lo, (self.lo + self.hi) / 2.0, self.hi]
+
+    class st:  # noqa: N801 - mimics hypothesis.strategies
+        integers = staticmethod(_IntRange)
+        floats = staticmethod(_FloatRange)
+
+    def settings(**_kw):
+        return lambda f: f
+
+    def given(*strategies):
+        def deco(f):
+            def wrapper():
+                for args in itertools.product(
+                        *(s.samples() for s in strategies)):
+                    f(*args)
+            wrapper.__name__ = f.__name__
+            wrapper.__doc__ = f.__doc__
+            return wrapper
+        return deco
 
 
 def pytest_addoption(parser):

@@ -1,30 +1,23 @@
-"""Sharding rules + dry-run machinery.  Multi-device bits run in
-subprocesses with their own XLA_FLAGS (the main process keeps 1 device)."""
+"""Sharding rules + dry-run machinery + wavelet-compressed DP reduction
+properties.  Multi-device bits run in subprocesses with their own
+XLA_FLAGS via the shared ``conftest.run_in_devices`` helper (the main
+process keeps 1 device)."""
 
 import json
 import os
-import subprocess
-import sys
-import textwrap
 
 import jax
+import jax.numpy as jnp
+import numpy as np
 import pytest
+
+from conftest import given, run_in_devices, settings, st
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
-def _run(code: str, timeout=560):
-    env = dict(os.environ, PYTHONPATH="src")
-    env.pop("XLA_FLAGS", None)
-    return subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
-                          capture_output=True, text=True, cwd=REPO, env=env,
-                          timeout=timeout)
-
-
 def test_spec_rules_divisibility_fallbacks():
     code = """
-    import os
-    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
     import jax
     from jax.sharding import PartitionSpec as P
     from repro.distributed import sharding as shr
@@ -57,14 +50,33 @@ def test_spec_rules_divisibility_fallbacks():
     assert s == P(None, ("model", "data")), s
     print("RULES_OK")
     """
-    r = _run(code)
+    r = run_in_devices(512, code)
     assert "RULES_OK" in r.stdout, r.stdout + r.stderr
+
+
+def test_spec_rules_skip_axes_absent_from_mesh():
+    """A pure-DP mesh has no 'model' axis: rules that name it must fall
+    through to replication instead of KeyError-ing — the sharded train
+    path builds its FSDP layout on exactly such meshes."""
+    code = """
+    from jax.sharding import PartitionSpec as P
+    from repro import compat
+    from repro.distributed import sharding as shr
+    from repro.models.layers import Axes
+    mesh = compat.make_mesh((8,), ("data",))
+    rules = shr.train_rules(mesh)
+    s = shr.spec_for((256, 64), Axes(("vocab", "embed")), mesh, rules)
+    assert s == P(None, "data"), s      # vocab wants 'model' -> replicated
+    s = shr.spec_for((64, 128), Axes(("embed", "mlp")), mesh, rules)
+    assert s == P("data"), s
+    print("DPMESH_OK")
+    """
+    r = run_in_devices(8, code)
+    assert "DPMESH_OK" in r.stdout, r.stdout + r.stderr
 
 
 def test_multipod_mesh_shapes():
     code = """
-    import os
-    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
     from repro.launch.mesh import make_production_mesh
     m1 = make_production_mesh()
     assert m1.axis_names == ("data", "model") and m1.devices.size == 256
@@ -73,7 +85,7 @@ def test_multipod_mesh_shapes():
     assert m2.devices.size == 512
     print("MESH_OK")
     """
-    r = _run(code)
+    r = run_in_devices(512, code)
     assert "MESH_OK" in r.stdout, r.stdout + r.stderr
 
 
@@ -94,7 +106,8 @@ def test_dryrun_cell_compiles(arch, shape):
     assert r["fits_hbm"], r["memory"]
     print("CELL_OK", r["roofline"]["bottleneck"])
     """
-    r = _run(code)
+    # dryrun sets its own 512-device XLA_FLAGS before backend init
+    r = run_in_devices(1, code)
     assert "CELL_OK" in r.stdout, r.stdout[-2000:] + r.stderr[-3000:]
 
 
@@ -116,8 +129,6 @@ def test_dryrun_results_file_if_present():
 def test_hlo_analyzer_scales_while_bodies():
     """The analyzer multiplies loop-body FLOPs by the trip count."""
     code = """
-    import os
-    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     import jax, jax.numpy as jnp, sys
     sys.path.insert(0, ".")
     from benchmarks import hlo_analysis
@@ -135,5 +146,121 @@ def test_hlo_analyzer_scales_while_bodies():
     assert abs(flops - expect) / expect < 0.01, (flops, expect)
     print("ANALYZER_OK")
     """
-    r = _run(code)
+    r = run_in_devices(8, code)
     assert "ANALYZER_OK" in r.stdout, r.stdout + r.stderr
+
+
+# ---------------------------------------------------------------------------
+# Property tests: wavelet-compressed DP reduction (satellite).
+#
+# The pure per-shard math (compression.reduce_terms / reconstruct) runs in
+# THIS process against compression.emulated_mean — a sequential worker-order
+# sum whose bitwise agreement with the real 8-device psum is pinned
+# separately in tests/test_sharded_train.py — so the properties get full
+# hypothesis coverage without paying a subprocess per draw.
+# ---------------------------------------------------------------------------
+
+def _stack(seed: int, n_workers: int, m: int, n: int, scale: float = 1.0):
+    return jax.random.normal(jax.random.key(seed),
+                             (n_workers, m, n), jnp.float32) * scale
+
+
+def _exact_mean(stack):
+    from repro.distributed import compression
+    return compression.emulated_mean(stack, level=0, detail_dtype=None)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 4), st.integers(0, 1000), st.floats(0.1, 8.0))
+def test_compressed_mean_linearity_exact_without_quantization(level, seed,
+                                                              scale):
+    """mean ∘ DWT == DWT ∘ mean: with f32 detail bands (no quantization)
+    the compressed reduction IS the exact mean up to f32 rounding of the
+    orthonormal round-trip — the linearity the whole scheme rests on."""
+    from repro.distributed import compression
+    g = _stack(seed, 4, 3, 16 << level, scale)
+    out = compression.emulated_mean(g, level=level, detail_dtype=jnp.float32)
+    exact = _exact_mean(g)
+    tol = 1e-6 * float(jnp.max(jnp.abs(exact)) + 1e-20)
+    assert float(jnp.max(jnp.abs(out - exact))) <= tol
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 3), st.integers(0, 1000))
+def test_compressed_mean_error_bounded_by_detail_eps(level, seed):
+    """Detail-band quantization is the ONLY error source, so the deviation
+    from the exact mean is bounded by the detail dtype's machine epsilon
+    times the gradient magnitude (loose constant for the transform's ~√2
+    band growth and the accumulation), and tightens with the wire dtype:
+    err(bf16) ≤ err(f8) bound-wise."""
+    from repro.distributed import compression
+    g = _stack(seed, 8, 4, 8 << level)
+    exact = _exact_mean(g)
+    gmax = float(jnp.max(jnp.abs(g)))
+    for dtype in (jnp.bfloat16, jnp.float8_e4m3fn):
+        out = compression.emulated_mean(g, level=level, detail_dtype=dtype)
+        err = float(jnp.max(jnp.abs(out - exact)))
+        bound = 8.0 * float(jnp.finfo(dtype).eps) * gmax
+        assert err <= bound, (str(dtype), err, bound)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 1000))
+def test_non_compressible_leaves_take_exact_psum(seed):
+    """The ndim<2 / non-divisible-width / level-0 fallbacks return the
+    exact psum mean bitwise (no wavelet machinery touches them)."""
+    from repro.distributed import compression
+    key = jax.random.key(seed)
+    vec = jax.random.normal(key, (8, 33))                      # ndim < 2
+    odd = jax.random.normal(key, (8, 4, 30))       # 30 % 4 != 0 at level 2
+    wide = jax.random.normal(key, (8, 4, 32))
+    for stack, level, dtype in [(vec, 2, jnp.bfloat16),
+                                (odd, 2, jnp.bfloat16),
+                                (wide, 0, jnp.bfloat16),
+                                (wide, 2, None)]:              # exact mode
+        out = compression.emulated_mean(stack, level=level, detail_dtype=dtype)
+        np.testing.assert_array_equal(np.asarray(out),
+                                      np.asarray(_exact_mean(stack)))
+
+
+def test_compressible_predicate():
+    from repro.distributed.compression import compressible
+    assert compressible((4, 32), 2)
+    assert not compressible((32,), 2)       # 1-D
+    assert not compressible((4, 30), 2)     # width ∤ 2^level
+    assert not compressible((4, 32), 0)     # level 0
+
+
+def test_dp_reduce_spec_parse():
+    from repro.distributed.compression import DPReduceSpec
+    assert DPReduceSpec.parse("none") is None
+    ex = DPReduceSpec.parse("exact", level=3)
+    assert ex.exact and ex.detail_dtype is None
+    co = DPReduceSpec.parse("compressed", level=2,
+                            detail_dtype="float8_e4m3fn")
+    assert not co.exact
+    assert jnp.dtype(co.detail_dtype) == jnp.dtype("float8_e4m3fn")
+    with pytest.raises(ValueError):
+        DPReduceSpec.parse("zstd")
+
+
+def test_tree_wire_bytes_accounting():
+    """Per-leaf accounting: compressible leaves charge the split format,
+    fallback leaves full f32; the f8 wire at level 2 clears the ≥2×
+    headline the shard benchmark gates on."""
+    from repro.distributed.compression import DPReduceSpec, tree_wire_bytes
+    tree = {"w": jax.ShapeDtypeStruct((64, 256), jnp.float32),
+            "b": jax.ShapeDtypeStruct((256,), jnp.float32)}
+    full = tree_wire_bytes(tree, None)
+    assert full == 2 * (64 * 256 + 256) * 4
+    bf16 = tree_wire_bytes(tree, DPReduceSpec(level=2))
+    f8 = tree_wire_bytes(
+        tree, DPReduceSpec(level=2, detail_dtype=jnp.float8_e4m3fn))
+    w = 64 * 256
+    assert bf16 == 2 * ((w // 4) * 4 + (3 * w // 4) * 2) + 2 * 256 * 4
+    assert f8 == 2 * ((w // 4) * 4 + (3 * w // 4) * 1) + 2 * 256 * 4
+    assert f8 < bf16 < full
+    # the vector rides the exact psum in every mode
+    only_w = {"w": tree["w"]}
+    assert tree_wire_bytes(only_w, None) / tree_wire_bytes(
+        only_w, DPReduceSpec(level=2, detail_dtype=jnp.float8_e4m3fn)) >= 2.0

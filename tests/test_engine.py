@@ -235,3 +235,20 @@ def test_bucketed_gwt_backend_sweep(kernel_impl):
         np.testing.assert_allclose(np.asarray(a, np.float32),
                                    np.asarray(b, np.float32),
                                    rtol=1e-4, atol=1e-5)
+
+
+def test_state_sharding_hint_structure_mismatch_raises():
+    """A per-bucket placement hint whose structure drifted from the bucket
+    state (wrong dict level, stale optimizer config) must fail loudly at
+    init, not silently skip placement (the sharded train path depends on
+    state being born on its mesh layout)."""
+    params = {"mlp": {"w": jnp.zeros((8, 16))}}
+    bad = {"gwt_last__mlp.w": {"host": 0}}      # missing m/v + prev_norm
+    opt = optim.make("gwt", lr=1e-3, level=2, state_shardings=bad)
+    with pytest.raises(ValueError, match="state_shardings hint"):
+        opt.init(params)
+    # hints for bucket names that don't exist are simply unused
+    opt2 = optim.make("gwt", lr=1e-3, level=2,
+                      state_shardings={"gwt_last__nope": {"host": 0}})
+    st = opt2.init(params)
+    assert "gwt_last__mlp.w" in st["buckets"]

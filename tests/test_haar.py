@@ -1,48 +1,15 @@
 """Unit + property tests for the Haar transform substrate (paper §III-A,
 Eq. (1)-(3)) and the theory of §III-C (Theorem 1)."""
 
-import itertools
-
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-try:
-    from hypothesis import given, settings, strategies as st
-except ImportError:
-    # hypothesis is optional (requirements-dev.txt).  Fallback: a miniature
-    # deterministic 'given' that runs each property over a fixed sample grid
-    # (endpoints + midpoint per strategy) so the orthonormality/round-trip
-    # checks still execute — fewer draws, same invariants, fixed seeds.
-    class _IntRange:
-        def __init__(self, lo, hi):
-            self.lo, self.hi = lo, hi
-
-        def samples(self):
-            return sorted({self.lo, (self.lo + self.hi) // 2, self.hi})
-
-    class _FloatRange(_IntRange):
-        def samples(self):
-            return [self.lo, (self.lo + self.hi) / 2.0, self.hi]
-
-    class st:  # noqa: N801 - mimics hypothesis.strategies
-        integers = staticmethod(_IntRange)
-        floats = staticmethod(_FloatRange)
-
-    def settings(**_kw):
-        return lambda f: f
-
-    def given(*strategies):
-        def deco(f):
-            def wrapper():
-                for args in itertools.product(
-                        *(s.samples() for s in strategies)):
-                    f(*args)
-            wrapper.__name__ = f.__name__
-            wrapper.__doc__ = f.__doc__
-            return wrapper
-        return deco
+# hypothesis is optional (requirements-dev.txt); without it the shared
+# conftest shim runs each property over a fixed-seed sample grid
+# (endpoints + midpoint per strategy) — fewer draws, same invariants.
+from conftest import given, settings, st
 
 from repro.core import haar
 

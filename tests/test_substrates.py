@@ -1,15 +1,12 @@
 """Data pipeline, checkpointing (incl. resharding restore), fault-tolerant
 runtime, wavelet-compressed DP reduction."""
 
-import os
-import subprocess
-import sys
-import textwrap
-
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+from conftest import run_in_devices
 
 from repro.checkpoint.manager import CheckpointManager, StructureMismatch
 from repro.data.pipeline import ByteLM, Prefetcher, SyntheticLM
@@ -77,9 +74,7 @@ def test_restore_reshards_under_new_mesh(tmp_path):
     tree = {"w": jnp.arange(64, dtype=jnp.float32).reshape(8, 8)}
     cm = CheckpointManager(str(tmp_path))
     cm.save(1, tree, blocking=True)
-    code = textwrap.dedent(f"""
-        import os
-        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    code = f"""
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import NamedSharding, PartitionSpec as P
         from repro import compat
@@ -95,11 +90,8 @@ def test_restore_reshards_under_new_mesh(tmp_path):
         np.testing.assert_array_equal(
             np.asarray(arr), np.arange(64, dtype=np.float32).reshape(8, 8))
         print("RESHARD_OK")
-    """)
-    env = dict(os.environ, PYTHONPATH="src")
-    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
-                       text=True, cwd=os.path.dirname(os.path.dirname(
-                           os.path.abspath(__file__))), env=env, timeout=300)
+    """
+    r = run_in_devices(8, code, timeout=300)
     assert "RESHARD_OK" in r.stdout, r.stdout + r.stderr
 
 
@@ -146,9 +138,7 @@ def test_train_loop_checkpoints_and_resumes(tmp_path):
 
 def test_wavelet_compressed_psum_close_to_exact():
     """Compressed DP reduction ≈ exact mean; approximation band exact."""
-    code = textwrap.dedent("""
-        import os
-        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    code = """
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import PartitionSpec as P
         from repro import compat
@@ -163,11 +153,8 @@ def test_wavelet_compressed_psum_close_to_exact():
         rel = err / float(jnp.abs(exact).max())
         assert rel < 0.02, rel       # bf16 detail quantization only
         print("COMPRESS_OK", rel)
-    """)
-    env = dict(os.environ, PYTHONPATH="src")
-    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
-                       text=True, cwd=os.path.dirname(os.path.dirname(
-                           os.path.abspath(__file__))), env=env, timeout=300)
+    """
+    r = run_in_devices(8, code, timeout=300)
     assert "COMPRESS_OK" in r.stdout, r.stdout + r.stderr
 
 
