@@ -602,6 +602,233 @@ def shard_bench(quick: bool):
     emit("shard/json", 0.0, path)
 
 
+# ---------------------------------------------------------------------------
+# Data subsystem: corpus-build CLI smoke + loader throughput (thread
+# Prefetcher vs shared-memory process workers).  The tokenization-heavy
+# source (on-the-fly BPE) is GIL-bound, so the thread path serializes with
+# the consumer while process workers scale — GATED: process workers must
+# not be slower than the thread path on that source.  The mmap corpus row
+# is telemetry (pre-tokenized reads are too cheap for workers to matter).
+# ---------------------------------------------------------------------------
+
+FIXTURE_GLOB = "tests/fixtures/corpus/*.txt"
+DATA_WORKER_GATE = 0.9   # process/thread tokens/sec floor (noise margin)
+
+
+_FIXTURE_DIR = None
+
+
+def _fixture_corpus() -> str:
+    """Build the committed fixture corpus once per benchmark process
+    (deterministic content: same text + tokenizer config -> same shards
+    + hash).  A fresh ``mkdtemp`` per process — a fixed world-readable
+    /tmp path would race concurrent benchmark runs and collide across
+    users.  eval_fraction 0.1 keeps ~9 held-out seq-64 windows, enough
+    for one full unique eval batch."""
+    global _FIXTURE_DIR
+    if _FIXTURE_DIR is None:
+        import tempfile
+        from repro.data.build_corpus import build
+        _FIXTURE_DIR = tempfile.mkdtemp(prefix="repro_bench_corpus_")
+        build(FIXTURE_GLOB, _FIXTURE_DIR, tokenizer_kind="bpe",
+              vocab_size=512, eval_fraction=0.1)
+    return _FIXTURE_DIR
+
+
+def _drain_tokens_per_sec(pf, n_batches: int, warmup: int, seq: int,
+                          batch: int, segments: int = 3) -> float:
+    """Steady-state production rate, best of ``segments`` back-to-back
+    timed drains.  The warmup must EXCEED the queue depth (otherwise the
+    timed drain partly reads batches buffered during construction and
+    flatters the slow path); best-of-segments because a 2-core CI box
+    under frequency/background drift swings single-shot readings ~2×,
+    and the gate below compares two such readings."""
+    for _ in range(warmup):
+        next(pf)
+    best = 0.0
+    for _ in range(segments):
+        t0 = time.perf_counter()
+        for _ in range(n_batches):
+            next(pf)
+        best = max(best, n_batches * batch * seq
+                   / (time.perf_counter() - t0))
+    return best
+
+
+def data_bench(quick: bool):
+    import json
+    import os
+    import subprocess
+    import tempfile
+
+    from repro.data.build_corpus import DOC_SEP, read_documents
+    from repro.data.pipeline import (CorpusLM, Prefetcher, TokenizingTextLM)
+    from repro.data.store import TokenStore
+    from repro.data.workers import ProcessPrefetcher
+
+    # corpus-build CLI smoke: the exact command the README quickstart gives
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    with tempfile.TemporaryDirectory() as td:
+        r = subprocess.run(
+            [sys.executable, "-m", "repro.data.build_corpus",
+             "--input", FIXTURE_GLOB, "--out", os.path.join(td, "c"),
+             "--tokenizer", "bpe", "--vocab", "512", "--verify"],
+            capture_output=True, text=True, cwd=repo,
+            env=dict(os.environ, PYTHONPATH="src"), timeout=300)
+    if r.returncode != 0 or "roundtrip=ok" not in r.stdout:
+        emit("data/build_cli_ERROR", 0.0, (r.stdout + r.stderr)[-300:])
+        return
+    emit("data/build_cli", 0.0, r.stdout.strip().splitlines()[0][:80])
+
+    corpus = _fixture_corpus()
+    store = TokenStore(corpus)
+    # B=32 keeps each BPE batch ~15-30ms of pure-python encode: heavy
+    # enough that the per-batch IPC+copy overhead of the worker path is
+    # noise next to the encode the workers parallelize
+    S, B = 64, 32
+    n = 10 if quick else 14
+    depth = 4
+    out = {"config": {"seq": S, "batch": B, "batches_timed": n,
+                      "corpus_hash": store.corpus_hash[:12]}, "cells": {}}
+
+    # mmap fast path (telemetry): pre-tokenized windows are nearly free
+    mm = CorpusLM(corpus, S, B, seed=0)
+    with Prefetcher(mm, depth=depth) as pf:
+        mmap_tps = _drain_tokens_per_sec(pf, n, depth + 2, S, B)
+    out["cells"]["corpus_mmap_thread"] = {"tokens_per_sec": round(mmap_tps)}
+    emit("data/corpus_mmap_thread", 1e6 * B * S / mmap_tps,
+         f"{mmap_tps:,.0f} tok/s (pre-tokenized mmap)")
+
+    # tokenization-heavy source: on-the-fly BPE (GIL-bound pure python).
+    # Thread and process paths are timed in INTERLEAVED segments (both
+    # pipelines alive, best segment each): on a shared CI host,
+    # sequential measurements live in different background-noise epochs
+    # and the ratio gate flaps; interleaving samples both paths across
+    # the same minutes.  The idle pipeline is quiescent meanwhile — its
+    # bounded queue/slot ring fills and its producers block.
+    text = DOC_SEP.join(read_documents(os.path.join(repo, FIXTURE_GLOB)))
+    heavy = TokenizingTextLM(text, store.tokenizer, S, B, seed=0)
+    # workers sized to the host: oversubscribing a small box (4 workers
+    # on 2 cores) just context-switches away the win
+    workers = 2 if quick else max(2, min(4, os.cpu_count() or 2))
+    thread_tps = proc_tps = 0.0
+    with Prefetcher(heavy, depth=depth) as pf, \
+            ProcessPrefetcher(heavy, depth=2 * workers,
+                              num_workers=workers) as pp:
+        for _ in range(3 if quick else 4):
+            # per-segment warmup >= the pipeline's buffer capacity: the
+            # idle path refills its queue/slots during the other path's
+            # segment, and timing those pre-buffered batches flatters a
+            # path by buffer/n (measured: a phantom 1.5x thread "win")
+            thread_tps = max(thread_tps,
+                             _drain_tokens_per_sec(pf, n, depth + 1, S, B,
+                                                   segments=1))
+            proc_tps = max(proc_tps,
+                           _drain_tokens_per_sec(pp, n, 2 * workers + 3,
+                                                 S, B, segments=1))
+    ratio = proc_tps / thread_tps
+    out["cells"]["bpe_thread"] = {"tokens_per_sec": round(thread_tps)}
+    out["cells"][f"bpe_process_{workers}w"] = {
+        "tokens_per_sec": round(proc_tps), "vs_thread": round(ratio, 3)}
+    emit("data/bpe_thread", 1e6 * B * S / thread_tps,
+         f"{thread_tps:,.0f} tok/s (GIL-bound)")
+    emit(f"data/bpe_process_{workers}w", 1e6 * B * S / proc_tps,
+         f"{proc_tps:,.0f} tok/s ({ratio:.2f}x thread)")
+    if ratio < DATA_WORKER_GATE:
+        emit("data/worker_gate_ERROR", 0.0,
+             f"process workers {proc_tps:,.0f} tok/s < "
+             f"{DATA_WORKER_GATE}x thread {thread_tps:,.0f}")
+    else:
+        emit("data/worker_gate", 0.0,
+             f"process {ratio:.2f}x thread (gate >= {DATA_WORKER_GATE}x)")
+
+    here = os.path.dirname(os.path.abspath(__file__))
+    path = os.path.join(here, "BENCH_data_cpu_quick.json" if quick
+                        else "BENCH_data_cpu.json")
+    with open(path, "w") as f:
+        json.dump(out, f, indent=1)
+    emit("data/json", 0.0, path)
+
+
+# ---------------------------------------------------------------------------
+# Loss-curve harness (the paper's actual yardstick): train {gwt, adam,
+# galore} smoke configs on the committed fixture corpus through the real
+# pipelined TrainLoop with streaming held-out eval, record final/AUC train
+# loss + eval perplexity curve to BENCH_curve_cpu.json.  Gate: every
+# optimizer must LEARN (final loss well under its initial loss) — a
+# numerics regression in any engine family trips it.
+# ---------------------------------------------------------------------------
+
+CURVE_LEARN_GATE = 0.9   # final loss must be < gate * initial loss
+# (galore-1/4 on the 24-step --quick budget only reaches ~0.79× its
+# initial loss — the gate is a did-it-learn-at-all tripwire, not a
+# quality bar; quality lives in the committed per-cell numbers)
+
+
+def curve_bench(quick: bool):
+    import json
+    import os
+
+    from repro import configs, optim
+    from repro.data.eval import make_lm_evaluator
+    from repro.data.pipeline import CorpusLM
+    from repro.models import lm
+    from repro.optim.schedules import warmup_cosine
+    from repro.runtime.fault_tolerance import TrainLoop
+
+    corpus = _fixture_corpus()
+    steps = 24 if quick else 72
+    S, B = 64, 8
+    cfg = configs.LLAMA["llama-60m"].with_(
+        n_layers=2, d_model=128, n_heads=4, n_kv_heads=4, head_dim=32,
+        d_ff=256, vocab=512)
+    eval_every = max(steps // 3, 1)
+    silent = lambda s: None  # noqa: E731
+    train_src = CorpusLM(corpus, S, B, seed=0)
+    out = {"config": {"arch": cfg.name, "seq": S, "batch": B,
+                      "steps": steps, "eval_every": eval_every,
+                      "corpus_hash": train_src.store.corpus_hash[:12]},
+           "cells": {}}
+    methods = [("gwt2", "gwt", dict(level=2)),
+               ("adam", "adam", {}),
+               ("galore_1_4", "galore", dict(rank_frac=0.25,
+                                             update_gap=steps))]
+    for tag, name, kw in methods:
+        opt = optim.make(name, lr=warmup_cosine(0.01, steps), **kw)
+        params = lm.init(cfg, jax.random.key(0))
+        st = opt.init(params)
+        ev = make_lm_evaluator(cfg, lm,
+                               CorpusLM(corpus, S, B, seed=0, split="eval"),
+                               n_batches=4)
+        loop = TrainLoop(lm.make_train_step(cfg, opt), None, train_src,
+                         log_every=eval_every, max_chunk=8, log=silent,
+                         evaluator=ev, eval_every=eval_every)
+        t0 = time.perf_counter()
+        _, _, losses = loop.run(params, st, num_steps=steps)
+        dt = time.perf_counter() - t0
+        k = max(steps // 10, 1)
+        cell = {"initial_loss": round(losses[0], 4),
+                "final_loss": round(sum(losses[-k:]) / k, 4),
+                "auc_loss": round(sum(losses) / len(losses), 4),
+                "eval_curve": [(s, round(v, 4)) for s, v in ev.history],
+                "final_eval_loss": round(ev.history[-1][1], 4),
+                "steps_per_sec": round(steps / dt, 2)}
+        out["cells"][tag] = cell
+        emit(f"curve/{tag}", dt / steps * 1e6,
+             f"final={cell['final_loss']} auc={cell['auc_loss']} "
+             f"eval={cell['final_eval_loss']}")
+        if cell["final_loss"] > CURVE_LEARN_GATE * cell["initial_loss"]:
+            emit(f"curve/{tag}_learn_gate_ERROR", 0.0,
+                 f"final {cell['final_loss']} > {CURVE_LEARN_GATE} * "
+                 f"initial {cell['initial_loss']}")
+    here = os.path.dirname(os.path.abspath(__file__))
+    path = os.path.join(here, "BENCH_curve_cpu_quick.json" if quick
+                        else "BENCH_curve_cpu.json")
+    with open(path, "w") as f:
+        json.dump(out, f, indent=1)
+    emit("curve/json", 0.0, path)
+
+
 TABLES = {
     "table1": table1_memory,
     "table2": table2_pretrain,
@@ -613,6 +840,8 @@ TABLES = {
     "trace": trace_bench,
     "step": step_bench,
     "shard": shard_bench,
+    "data": data_bench,
+    "curve": curve_bench,
 }
 
 

@@ -42,6 +42,15 @@ echo "== sharded train path benchmark (8-device sim; fails unless the =="
 echo "== compressed DP wire moves >=2x fewer bytes at level >= 2) =="
 python -m benchmarks.run --only shard --quick
 
+echo "== data subsystem: corpus-build CLI smoke + loader throughput =="
+echo "== (fails if process workers are slower than the prefetch thread =="
+echo "== on the tokenization-heavy source) =="
+python -m benchmarks.run --only data --quick
+
+echo "== loss-curve harness: gwt/adam/galore on the fixture corpus =="
+echo "== (fails if any optimizer stops learning) =="
+python -m benchmarks.run --only curve --quick
+
 if [[ "${1:-}" == "--quick" ]]; then
     exit 0
 fi

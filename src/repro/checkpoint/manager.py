@@ -52,9 +52,16 @@ def _leaf_paths(tree):
 
 
 class CheckpointManager:
-    def __init__(self, directory: str, gc_keep: int = 3):
+    def __init__(self, directory: str, gc_keep: int = 3,
+                 run_meta: Optional[dict] = None):
+        """``run_meta`` (JSON-serializable) is stamped into every
+        manifest under ``"run"`` — the launcher records data provenance
+        there (source kind, corpus content hash, sample-order seed), so a
+        resume can refuse to continue on a different corpus than the one
+        the checkpoint was trained on (see ``launch/train.py``)."""
         self.dir = directory
         self.gc_keep = gc_keep
+        self.run_meta = run_meta
         os.makedirs(directory, exist_ok=True)
         self._thread: Optional[threading.Thread] = None
 
@@ -93,6 +100,8 @@ class CheckpointManager:
         os.makedirs(tmp)
         flat, treedef = _leaf_paths(tree)
         meta = {"step": step, "treedef": str(treedef), "leaves": []}
+        if self.run_meta is not None:
+            meta["run"] = self.run_meta
         for i, leaf in enumerate(flat):
             arr = np.asarray(jax.device_get(leaf))
             # raw bytes + manifest dtype: robust for ml_dtypes (bf16 etc.)

@@ -132,7 +132,7 @@ def input_specs(cfg: ModelConfig, shape: ShapeConfig):
 
 
 def skip_reason(cfg: ModelConfig, shape: ShapeConfig) -> Optional[str]:
-    """Assignment skip rules (documented in DESIGN.md §5)."""
+    """Assignment skip rules (documented in DESIGN.md §6)."""
     if shape.name == "long_500k" and not cfg.sub_quadratic:
         return ("pure full-attention arch: long_500k needs sub-quadratic "
                 "attention (assignment rule)")

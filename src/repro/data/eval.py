@@ -1,0 +1,81 @@
+"""Streaming held-out evaluation: perplexity over a fixed eval stream.
+
+``Evaluator`` wraps a jitted per-batch loss and a batch source (usually
+the corpus eval split via ``make_source(..., split='eval')`` — sequential
+windows, no shuffle) and reduces mean token loss over a FIXED number of
+batches, so successive evaluations along a run are comparable points on
+one curve.  It only *reads* params — calling it between pipelined train
+chunks cannot perturb training numerics, and it composes with donation
+(params passed in are the live, about-to-be-donated buffers; the eval
+computation holds its own reference until the scalar is fetched).
+
+This module is the one place in ``repro.data`` that imports jax (the
+worker-process modules must stay numpy-only); the import is deferred to
+call time so building a source in a data worker never pulls XLA in.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Callable, List, Optional, Tuple
+
+
+class Evaluator:
+    """Callable ``(params, step) -> {'loss', 'ppl', 'n_batches'}``;
+    appends every result to ``history`` as ``(step, loss)``."""
+
+    def __init__(self, loss_fn: Callable, source, n_batches: int = 8,
+                 name: str = "eval"):
+        """``loss_fn(params, batch) -> scalar mean token loss`` (jitted
+        lazily on first call); ``source`` follows the ``batch(i)``
+        contract; batches ``0..n_batches-1`` form the eval set."""
+        if n_batches < 1:
+            raise ValueError(f"n_batches must be >= 1, got {n_batches}")
+        self.source = source
+        self.n_batches = n_batches
+        self.name = name
+        self.history: List[Tuple[int, float]] = []
+        self._loss_fn = loss_fn
+        self._jitted = None
+
+    def __call__(self, params, step: Optional[int] = None) -> dict:
+        import jax
+        import jax.numpy as jnp
+        if self._jitted is None:
+            self._jitted = jax.jit(self._loss_fn)
+        total = 0.0
+        for i in range(self.n_batches):
+            batch = {k: jnp.asarray(v)
+                     for k, v in self.source.batch(i).items()}
+            total += float(self._jitted(params, batch))
+        loss = total / self.n_batches
+        ppl = math.exp(min(loss, 30.0))   # overflow guard for random init
+        if step is not None:
+            self.history.append((step, loss))
+        return {"loss": loss, "ppl": ppl, "n_batches": self.n_batches}
+
+
+def make_lm_evaluator(cfg, mod, source, n_batches: int = 8,
+                      ctx=None) -> Evaluator:
+    """Evaluator over a model module's ``loss_fn`` (``models.lm`` or
+    ``models.encdec`` — anything exposing ``loss_fn(cfg, params, batch,
+    ctx=...)``).
+
+    When the source is a window-counted corpus split (it exposes
+    ``n_windows``/``local_batch``, i.e. ``CorpusLM``), ``n_batches`` is
+    CAPPED so the eval set never wraps past the unique held-out windows
+    — "perplexity over N batches" must not silently re-score the same
+    few windows on a small eval split."""
+    n_windows = getattr(source, "n_windows", None)
+    rows = getattr(source, "local_batch", None)
+    if n_windows and rows:
+        unique_batches = max(n_windows // rows, 1)
+        if n_batches > unique_batches:
+            print(f"[eval] capping eval batches {n_batches} -> "
+                  f"{unique_batches}: the held-out split has only "
+                  f"{n_windows} windows of {rows} rows")
+            n_batches = unique_batches
+
+    def loss(params, batch):
+        return mod.loss_fn(cfg, params, batch, ctx=ctx)
+    return Evaluator(loss, source, n_batches=n_batches)

@@ -24,6 +24,7 @@ the latest committed step with the data stream aligned.
 from __future__ import annotations
 
 import argparse
+import math
 
 import jax
 
@@ -60,7 +61,22 @@ def main(argv=None):
     ap.add_argument("--seq", type=int, default=256)
     ap.add_argument("--accum", type=int, default=1)
     ap.add_argument("--data", default="synthetic",
-                    choices=["synthetic", "bytes"])
+                    choices=["synthetic", "bytes", "corpus"])
+    ap.add_argument("--corpus-dir", default="",
+                    help="with --data corpus: a directory built by "
+                         "`python -m repro.data.build_corpus` (mmap "
+                         "token shards + index)")
+    ap.add_argument("--workers", type=int, default=0,
+                    help="data-loader worker PROCESSES (shared-memory "
+                         "transport; 0 = in-process prefetch thread).  "
+                         "Batches are a pure function of the step, so "
+                         "worker count never changes the stream — safe "
+                         "to vary across resumes")
+    ap.add_argument("--eval-every", type=int, default=0,
+                    help="evaluate held-out loss/perplexity every N "
+                         "steps (corpus eval split, or a disjoint "
+                         "synthetic stream); 0 disables")
+    ap.add_argument("--eval-batches", type=int, default=8)
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--ckpt-every", type=int, default=100)
     ap.add_argument("--log-every", type=int, default=10)
@@ -83,6 +99,12 @@ def main(argv=None):
                     choices=["bfloat16", "float16", "float8_e4m3fn"],
                     help="detail-band wire dtype for --dp-reduce "
                          "compressed (the psum ships this dtype)")
+    ap.add_argument("--dp-error-feedback", action="store_true",
+                    help="with --dp-reduce compressed: keep each "
+                         "device's quantization residue and add it back "
+                         "before the next reduction (the compressed "
+                         "mean's bias averages out instead of "
+                         "persisting)")
     ap.add_argument("--shard-params", default="auto",
                     choices=["auto", "none"],
                     help="with --dp-reduce only (no effect otherwise — "
@@ -105,7 +127,8 @@ def main(argv=None):
     args = ap.parse_args(argv)
 
     dp_spec = DPReduceSpec.parse(args.dp_reduce, args.dp_level,
-                                 args.dp_detail_dtype)
+                                 args.dp_detail_dtype,
+                                 error_feedback=args.dp_error_feedback)
     if args.mesh:
         try:
             shape = tuple(int(s) for s in args.mesh.lower().split("x"))
@@ -132,6 +155,18 @@ def main(argv=None):
 
     cfg = (configs.get_smoke(args.arch) if args.smoke
            else configs.get_config(args.arch))
+    if args.data == "corpus":
+        # the embedding table must cover the corpus tokenizer: vocab is a
+        # property of the data, so the model grows to fit (never shrinks)
+        from repro.data.store import TokenStore
+        if not args.corpus_dir:
+            ap.error("--data corpus needs --corpus-dir (build one with "
+                     "`python -m repro.data.build_corpus`)")
+        corpus_vocab = TokenStore(args.corpus_dir).vocab_size
+        if corpus_vocab > cfg.vocab:
+            print(f"model vocab {cfg.vocab} -> {corpus_vocab} "
+                  f"(corpus tokenizer)")
+            cfg = cfg.with_(vocab=corpus_vocab)
     mod = encdec if cfg.arch_class == "encdec" else lm
     key = jax.random.key(args.seed)
     params = mod.init(cfg, key)
@@ -141,9 +176,16 @@ def main(argv=None):
     # adapter lives in the pipeline (WithEncoderFrames), not a monkey-patch.
     enc = cfg.arch_class == "encdec"
     source = make_source(args.data, cfg.vocab, args.seq, args.batch,
-                         seed=args.seed,
+                         seed=args.seed, corpus_dir=args.corpus_dir,
                          enc_frames=args.seq // 4 if enc else 0,
                          enc_dim=cfg.d_model if enc else 0)
+
+    # Data provenance stamped into every checkpoint manifest: a resume on
+    # a different corpus (or order seed) must fail loudly, not train on.
+    data_meta = {"kind": args.data, "order_seed": args.seed}
+    if args.data == "corpus":
+        data_meta["corpus_hash"] = source.store.corpus_hash \
+            if not enc else source.source.store.corpus_hash
 
     # Mesh mode: build the three sharding trees once (params, opt state,
     # batch) and hand the GWT engine its per-bucket hints before init.
@@ -179,6 +221,18 @@ def main(argv=None):
     if opt_shardings is not None:
         opt_state = jax.device_put(opt_state, opt_shardings)
 
+    # Error feedback rides OUTSIDE the optimizer state proper:
+    # opt_state = {"opt": ..., "dp_ef": per-device residue} (the sharded
+    # step unwraps it; checkpoints save/restore the wrapped tree whole).
+    ef_wrap = dp_spec is not None and dp_spec.error_feedback
+    if ef_wrap:
+        from repro.distributed import compression as dcomp
+        ef0 = dcomp.ef_init(params, ctx.dp_size)
+        ef_sh = dcomp.ef_state_shardings(ef0, ctx.mesh, ctx.dp_axis_names)
+        ef0 = jax.device_put(ef0, ef_sh)
+        opt_state = {"opt": opt_state, "dp_ef": ef0}
+        opt_shardings = {"opt": opt_shardings, "dp_ef": ef_sh}
+
     # Exact accounting for the *actual* optimizer/host (eval_shape over the
     # real init — no Adam-shaped approximation for non-GWT runs).
     from repro.optim.engine import state_bytes
@@ -200,10 +254,22 @@ def main(argv=None):
     train_step = mod.make_train_step(cfg, optimizer, accum_steps=args.accum,
                                      ctx=ctx, dp_reduce=dp_spec,
                                      shardings=shardings)
-    ckpt = CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
+    ckpt = CheckpointManager(args.ckpt_dir,
+                             run_meta={"data": data_meta}) \
+        if args.ckpt_dir else None
     start = 0
     if args.resume and ckpt is not None and ckpt.latest_step() is not None:
         from repro.checkpoint.manager import StructureMismatch
+        saved_data = ckpt.manifest().get("run", {}).get("data")
+        if saved_data is not None:
+            for k in ("kind", "corpus_hash", "order_seed"):
+                if k in saved_data and saved_data[k] != data_meta.get(k):
+                    raise SystemExit(
+                        f"--resume provenance mismatch: checkpoint in "
+                        f"{ckpt.dir} was trained with data {k}="
+                        f"{saved_data[k]!r}, this run has "
+                        f"{data_meta.get(k)!r} — refusing to continue on "
+                        f"a different data stream")
         restore_sh = None if shardings is None else \
             {"params": shardings.params, "opt": opt_shardings}
         try:
@@ -215,7 +281,9 @@ def main(argv=None):
             # "'leaves'" in its treedef) gets the migration path; a
             # mismatching *bucketed* checkpoint means the optimizer/model
             # config changed since the save — report that, don't guess.
-            if "'leaves'" not in ckpt.manifest().get("treedef", ""):
+            # (Error-feedback runs postdate the legacy layout entirely.)
+            if ef_wrap or \
+                    "'leaves'" not in ckpt.manifest().get("treedef", ""):
                 raise StructureMismatch(
                     f"checkpoint in {ckpt.dir} is bucketed but does not "
                     f"match this run's optimizer state — did --optimizer/"
@@ -230,9 +298,22 @@ def main(argv=None):
         params, opt_state = state["params"], state["opt"]
         print(f"resumed from step {start}")
 
+    evaluator = None
+    if args.eval_every:
+        from repro.data.eval import make_lm_evaluator
+        eval_src = make_source(args.data, cfg.vocab, args.seq, args.batch,
+                               seed=args.seed, corpus_dir=args.corpus_dir,
+                               split="eval",
+                               enc_frames=args.seq // 4 if enc else 0,
+                               enc_dim=cfg.d_model if enc else 0)
+        evaluator = make_lm_evaluator(cfg, mod, eval_src,
+                                      n_batches=args.eval_batches, ctx=ctx)
+
     loop = TrainLoop(train_step, ckpt, source, ckpt_every=args.ckpt_every,
                      log_every=args.log_every, save_final=ckpt is not None,
                      donate=not args.no_donate,
+                     num_workers=args.workers,
+                     evaluator=evaluator, eval_every=args.eval_every,
                      batch_shardings=None if shardings is None
                      else shardings.batch)
     with ctx.activate():
@@ -248,6 +329,10 @@ def main(argv=None):
         k = max(1, len(losses) // 10)
         print(f"final loss (mean of last {k}): "
               f"{sum(losses[-k:]) / k:.4f}")
+    if evaluator is not None and evaluator.history:
+        s, v = evaluator.history[-1]
+        print(f"final eval (step {s}): loss={v:.4f} "
+              f"ppl={math.exp(min(v, 30.0)):.2f}")
     return params, opt_state, losses
 
 

@@ -2,7 +2,7 @@
 abstract via one Builder-driven code path), scan-over-periods stack,
 train / prefill / decode steps.
 
-The layer stack is ``lax.scan`` over *period groups* (DESIGN.md §6):
+The layer stack is ``lax.scan`` over *period groups* (DESIGN.md §7):
 compile time and HLO size are O(1) in depth; the roofline analyzer
 multiplies while-body costs by the trip count.
 """
@@ -423,6 +423,14 @@ def make_sharded_train_step(cfg, optimizer, loss, *, ctx: MeshContext,
     dp_axes = ctx.dp_axis_names
     axis = dp_axes if len(dp_axes) > 1 else dp_axes[0]
     dp_size = ctx.dp_size
+    # error feedback (DESIGN.md §3 / --dp-error-feedback): each device
+    # keeps the residue its detail-band quantization discarded and adds it
+    # back next step.  The residue is per-device state, carried OUTSIDE the
+    # optimizer as ``opt_state = {"opt": <real>, "dp_ef": <residue>}``
+    # (leaves ``(dp_size, *param_shape)`` f32, sharded over the DP axis) —
+    # see ``compression.ef_init`` / ``ef_state_shardings``.
+    ef_on = bool(getattr(dp_reduce, "error_feedback", False)) \
+        and not dp_reduce.exact
     # inside the manual region every sharding constraint must be a no-op:
     # hand the forward a mesh-less context instead of letting wsc degrade
     inner_ctx = MeshContext(mesh=None, kernel_impl=ctx.kernel_impl)
@@ -433,7 +441,7 @@ def make_sharded_train_step(cfg, optimizer, loss, *, ctx: MeshContext,
         spec[bdim] = axis
         return jax.sharding.PartitionSpec(*spec)
 
-    def local_grads(params, lbatch):
+    def local_grads(params, lbatch, ef=None):
         micro = _contiguous_microbatches(lbatch, accum_steps)
 
         def body(carry, mb):
@@ -447,14 +455,35 @@ def make_sharded_train_step(cfg, optimizer, loss, *, ctx: MeshContext,
         g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
         (gsum, lsum), _ = jax.lax.scan(body, (g0, jnp.zeros(())), micro)
         gmean = jax.tree.map(lambda a: a / accum_steps, gsum)
-        grads = jax.tree.map(
-            functools.partial(compression.compressed_psum_mean,
-                              axis_name=axis, level=dp_reduce.level,
-                              detail_dtype=dp_reduce.detail_dtype), gmean)
         lmean = jax.lax.psum(lsum / accum_steps, axis) / dp_size
-        return grads, lmean
+        if not ef_on:
+            grads = jax.tree.map(
+                functools.partial(compression.compressed_psum_mean,
+                                  axis_name=axis, level=dp_reduce.level,
+                                  detail_dtype=dp_reduce.detail_dtype), gmean)
+            return grads, lmean
+        g_leaves, treedef = jax.tree.flatten(gmean)
+        e_leaves = treedef.flatten_up_to(ef)
+        pairs = [compression.compressed_psum_mean_ef(
+            g, e[0], axis_name=axis, level=dp_reduce.level,
+            detail_dtype=dp_reduce.detail_dtype)
+            for g, e in zip(g_leaves, e_leaves)]
+        grads = jax.tree_util.tree_unflatten(treedef,
+                                             [p[0] for p in pairs])
+        new_ef = jax.tree_util.tree_unflatten(treedef,
+                                              [p[1][None] for p in pairs])
+        return grads, lmean, new_ef
 
     def train_step(params, opt_state, batch):
+        ef_state = None
+        if ef_on:
+            if not (isinstance(opt_state, dict)
+                    and set(opt_state) == {"opt", "dp_ef"}):
+                raise ValueError(
+                    "error-feedback train step expects opt_state = "
+                    "{'opt': <optimizer state>, 'dp_ef': "
+                    "compression.ef_init(params, dp_size)}")
+            ef_state, opt_state = opt_state["dp_ef"], opt_state["opt"]
         if shardings is not None:
             params = jax.tree.map(jax.lax.with_sharding_constraint,
                                   params, shardings.params)
@@ -465,15 +494,24 @@ def make_sharded_train_step(cfg, optimizer, loss, *, ctx: MeshContext,
                                                          shardings.batch[k])
                      for k, v in batch.items()}
         from repro import compat
-        fn = compat.shard_map(
-            local_grads, ctx.mesh,
-            in_specs=(jax.tree.map(lambda _: jax.sharding.PartitionSpec(),
-                                   params),
-                      {k: batch_spec(k, v) for k, v in batch.items()}),
-            out_specs=(jax.tree.map(lambda _: jax.sharding.PartitionSpec(),
-                                    params),
-                       jax.sharding.PartitionSpec()))
-        grads, loss_mean = fn(params, batch)
+        P = jax.sharding.PartitionSpec
+        param_specs = jax.tree.map(lambda _: P(), params)
+        in_specs = (param_specs,
+                    {k: batch_spec(k, v) for k, v in batch.items()})
+        out_specs = (param_specs, P())
+        args = (params, batch)
+        if ef_on:
+            ef_specs = jax.tree.map(
+                lambda e: P(axis, *([None] * (e.ndim - 1))), ef_state)
+            in_specs += (ef_specs,)
+            out_specs += (ef_specs,)
+            args += (ef_state,)
+        fn = compat.shard_map(local_grads, ctx.mesh,
+                              in_specs=in_specs, out_specs=out_specs)
+        if ef_on:
+            grads, loss_mean, new_ef = fn(*args)
+        else:
+            grads, loss_mean = fn(*args)
         grads = jax.tree.map(lambda g: g.astype(cfg.dtype), grads)
         if shardings is not None:
             # pin the (replicated) reduced grads to the parameter layout so
@@ -487,6 +525,8 @@ def make_sharded_train_step(cfg, optimizer, loss, *, ctx: MeshContext,
             if shardings.opt is not None:
                 new_opt = jax.tree.map(jax.lax.with_sharding_constraint,
                                        new_opt, shardings.opt)
+        if ef_on:
+            new_opt = {"opt": new_opt, "dp_ef": new_ef}
         return new_params, new_opt, {"loss": loss_mean}
 
     if donate:

@@ -30,6 +30,11 @@ Designed for the 1000+-node posture (DESIGN.md §4):
   on load, so a restart under a different device count only needs a new
   mesh + sharding tree (exercised in tests with different CPU device
   counts).
+* **Data loading / eval**: ``num_workers > 0`` swaps the prefetch thread
+  for shared-memory worker processes (``repro.data.workers``) behind the
+  identical ``(index, batch)`` contract; ``evaluator``/``eval_every``
+  stream held-out perplexity between chunks, with eval boundaries on the
+  same absolute grid (DESIGN.md §5).
 """
 
 from __future__ import annotations
@@ -146,7 +151,8 @@ class TrainLoop:
                  log: Callable[[str], None] = print,
                  pipelined: bool = True, donate: bool = True,
                  max_chunk: int = 16, save_final: bool = False,
-                 batch_shardings=None):
+                 batch_shardings=None, num_workers: int = 0,
+                 evaluator=None, eval_every: int = 0):
         self.train_step = train_step
         self.ckpt = ckpt
         self.data = data_source
@@ -157,6 +163,18 @@ class TrainLoop:
         self.donate = donate
         self.max_chunk = max(int(max_chunk), 1)
         self.save_final = save_final
+        # data loading: 0 = background thread (Prefetcher); N > 0 = N
+        # worker PROCESSES (repro.data.workers.ProcessPrefetcher) — same
+        # (index, batch) protocol, so the desync check below is identical.
+        # Batches are a pure function of the step, so worker count can
+        # change across a resume without perturbing the stream.
+        self.num_workers = int(num_workers)
+        # held-out eval (repro.data.eval.Evaluator): runs between chunks
+        # every `eval_every` steps — eval boundaries join the absolute
+        # chunk grid, so enabling eval changes chunk partitioning (and
+        # hence rounding) deterministically, identically across resumes.
+        self.evaluator = evaluator
+        self.eval_every = int(eval_every)
         # per-batch NamedSharding dict (the mesh-aware step's input
         # layout): host chunks are device_put straight onto the DP shards
         # — one H2D per device instead of a replicated upload that the
@@ -234,7 +252,19 @@ class TrainLoop:
             ends.append(nxt(self.log_every))
         if self.ckpt is not None and self.ckpt_every:
             ends.append(nxt(self.ckpt_every))
+        if self.evaluator is not None and self.eval_every:
+            ends.append(nxt(self.eval_every))
         return max(min(ends), step + 1)
+
+    def _maybe_eval(self, step: int, params, k: int = 1):
+        if self.evaluator is None or not self.eval_every \
+                or step % self.eval_every:
+            return
+        t0 = time.monotonic()
+        r = self.evaluator(params, step)
+        self.watchdog.block(time.monotonic() - t0, k)
+        self.log(f"step {step}: eval_loss={r['loss']:.4f} "
+                 f"ppl={r['ppl']:.2f} ({self.evaluator.n_batches} batches)")
 
     def _save(self, step, params, opt_state, *, blocking=False,
               snapshot=False):
@@ -280,7 +310,14 @@ class TrainLoop:
             window, nwin = [], 0
 
         step = start_step
-        pf = Prefetcher(self.data, start_step=step, depth=2 * self.max_chunk)
+        if self.num_workers > 0:
+            from repro.data.workers import ProcessPrefetcher
+            pf = ProcessPrefetcher(self.data, start_step=step,
+                                   depth=2 * self.max_chunk,
+                                   num_workers=self.num_workers)
+        else:
+            pf = Prefetcher(self.data, start_step=step,
+                            depth=2 * self.max_chunk)
         preempted = False
         last_saved = None
         compiled_sizes: set = set()   # chunk lengths whose compile is paid
@@ -312,6 +349,7 @@ class TrainLoop:
                              f"(dispatch {dt / k * 1e3:.1f}ms/step, blocked "
                              f"{(self.watchdog.block_ema or 0) * 1e3:.1f}"
                              f"ms/step)")
+                self._maybe_eval(step, params, k)
                 if self.ckpt is not None and self.ckpt_every \
                         and step % self.ckpt_every == 0:
                     t0 = time.monotonic()
@@ -355,6 +393,7 @@ class TrainLoop:
             step += 1
             if self.log_every and step % self.log_every == 0:
                 self.log(f"step {step}: loss={loss:.4f}")
+            self._maybe_eval(step, params)
             if self.ckpt is not None and self.ckpt_every \
                     and step % self.ckpt_every == 0:
                 self._save(step, params, opt_state)

@@ -225,10 +225,10 @@ def test_stack_batches_layout():
 # Satellite: SIGTERM preempt → --resume bitwise determinism (launcher-level)
 # ---------------------------------------------------------------------------
 
-def _launch(ckpt_dir, extra=(), wait=True, timeout=600):
+def _launch(ckpt_dir, extra=(), wait=True, timeout=600, steps=120):
     cmd = [sys.executable, "-m", "repro.launch.train",
            "--arch", "llama-60m", "--smoke", "--optimizer", "gwt",
-           "--level", "2", "--lr", "0.01", "--steps", "120",
+           "--level", "2", "--lr", "0.01", "--steps", str(steps),
            "--batch", "2", "--seq", "32", "--log-every", "4",
            "--ckpt-every", "8", "--ckpt-dir", str(ckpt_dir), *extra]
     env = dict(os.environ, PYTHONPATH="src", JAX_ENABLE_CHECKS="1",
@@ -254,16 +254,11 @@ def _final_leaves(ckpt_dir, step=120):
     return blobs
 
 
-@pytest.mark.parametrize("seed", [0])
-def test_sigterm_preempt_then_resume_is_bitwise(tmp_path, seed):
-    """Kill a run mid-training (SIGTERM → synchronous checkpoint → exit 0),
-    restart with --resume, and require the final checkpoint — params AND
-    optimizer state — to be byte-identical to an uninterrupted run: the
-    data stream realigns and the absolute chunk grid reproduces the exact
-    scan groupings (JAX strict checks on; donation misuse would raise)."""
-    a, b = tmp_path / "interrupted", tmp_path / "straight"
-
-    proc = _launch(a, wait=False)
+def _interrupt_then_resume(a, extra=(), resume_extra=None, steps=120):
+    """Start a run, SIGTERM it once the first checkpoint commits, resume
+    it to completion.  ``resume_extra`` defaults to ``extra`` (pass a
+    different tuple to change flags across the restart)."""
+    proc = _launch(a, extra=extra, wait=False, steps=steps)
     deadline = time.time() + 570
     first_ckpt = os.path.join(str(a), "step_000000008", "COMMITTED")
     while time.time() < deadline and proc.poll() is None \
@@ -276,17 +271,55 @@ def test_sigterm_preempt_then_resume_is_bitwise(tmp_path, seed):
     else:
         out, err = proc.communicate()
         assert proc.returncode == 0, out + err
-
-    # the interrupted run must not have reached the end
     resumed_needed = not os.path.exists(
-        os.path.join(str(a), "step_000000120", "COMMITTED"))
-    log = _launch(a, extra=["--resume"])
+        os.path.join(str(a), f"step_{steps:09d}", "COMMITTED"))
+    log = _launch(a, extra=(*(extra if resume_extra is None
+                              else resume_extra), "--resume"), steps=steps)
     if resumed_needed:
         assert "resumed from step" in log, log
+    return log
 
+
+@pytest.mark.parametrize("seed", [0])
+def test_sigterm_preempt_then_resume_is_bitwise(tmp_path, seed):
+    """Kill a run mid-training (SIGTERM → synchronous checkpoint → exit 0),
+    restart with --resume, and require the final checkpoint — params AND
+    optimizer state — to be byte-identical to an uninterrupted run: the
+    data stream realigns and the absolute chunk grid reproduces the exact
+    scan groupings (JAX strict checks on; donation misuse would raise)."""
+    a, b = tmp_path / "interrupted", tmp_path / "straight"
+    _interrupt_then_resume(a)
     _launch(b)
 
     la, lb = _final_leaves(a), _final_leaves(b)
+    assert la.keys() == lb.keys()
+    for name in la:
+        assert la[name] == lb[name], f"leaf {name} differs after resume"
+
+
+def test_sigterm_resume_corpus_worker_count_bitwise(tmp_path):
+    """The corpus source through the launcher: SIGTERM mid-run with
+    PROCESS workers, then --resume with the plain prefetch thread (a
+    worker-count change across the restart), must reproduce the
+    uninterrupted thread-loaded run byte-for-byte — sample order is a
+    pure function of the step, so loader state never enters the
+    checkpoint and worker topology never enters the numerics.  Streaming
+    eval rides along to pin that eval boundaries join the absolute chunk
+    grid deterministically."""
+    from repro.data import build_corpus
+    corpus = tmp_path / "corpus"
+    build_corpus.build(os.path.join(REPO, "tests", "fixtures", "corpus",
+                                    "*.txt"),
+                       str(corpus), tokenizer_kind="bpe", vocab_size=512)
+    base = ("--data", "corpus", "--corpus-dir", str(corpus),
+            "--eval-every", "16", "--eval-batches", "2")
+    a, b = tmp_path / "interrupted", tmp_path / "straight"
+    _interrupt_then_resume(a, extra=(*base, "--workers", "2"),
+                           resume_extra=(*base, "--workers", "0"),
+                           steps=48)
+    _launch(b, extra=(*base, "--workers", "0"), steps=48)
+
+    la, lb = _final_leaves(a, step=48), _final_leaves(b, step=48)
     assert la.keys() == lb.keys()
     for name in la:
         assert la[name] == lb[name], f"leaf {name} differs after resume"
