@@ -380,17 +380,20 @@ def step_bench(quick: bool):
     out = {"config": {"arch": cfg.name, "batch": B, "seq": S,
                       "chunk": chunk},
            "cells": {}}
-    cells = [("gwt", "jnp"), ("gwt", "interpret"),
-             ("adam", None), ("galore", None)]
-    for name, impl in cells:
+    cells = [("gwt", "jnp", "f32"), ("gwt", "interpret", "f32"),
+             ("gwt", "jnp", "int8"),
+             ("adam", None, "f32"), ("galore", None, "f32")]
+    for name, impl, cdc in cells:
         tag = f"{name}_{impl}" if impl else name
+        if cdc != "f32":
+            tag += f"_{cdc}"
         interp = impl == "interpret"
         steps = (chunk if quick else 2 * chunk) if interp \
             else (2 * chunk if quick else 3 * chunk)
         kw = {"level": 2, "impl": impl} if name == "gwt" else \
             ({"rank_frac": 0.25, "update_gap": 2 * steps}
              if name == "galore" else {})
-        opt = optim.make(name, lr=1e-3, **kw)
+        opt = optim.make(name, lr=1e-3, state_codec=cdc, **kw)
         params = lm.init(cfg, jax.random.key(0))
         st = opt.init(params)
         data = SyntheticLM(cfg.vocab, S, B, seed=0)
@@ -442,6 +445,24 @@ def step_bench(quick: bool):
             emit(f"step/{tag}_donation_ERROR", 0.0,
                  f"donated peak live {live_don} >= undonated {live_plain}")
 
+    # compound substrate win: GWT moment subspaces x blocked-int8 codec vs
+    # the full-Adam f32 reference (both measured on this config's real
+    # init — the gate trips if either side's accounting drifts)
+    full_adam = out["cells"]["adam"]["opt_state_bytes"]
+    q8 = out["cells"]["gwt_jnp_int8"]["opt_state_bytes"]
+    ratio = full_adam / q8
+    out["compression"] = {"full_adam_f32_bytes": full_adam,
+                          "gwt_int8_bytes": q8,
+                          "ratio": round(ratio, 2)}
+    if ratio < 10.0:
+        emit("step/compression_ERROR", 0.0,
+             f"gwt+int8 opt state {q8}B only {ratio:.1f}x under full-Adam "
+             f"f32 {full_adam}B (< 10x)")
+    else:
+        emit("step/compression_gate", 0.0,
+             f"gwt+int8 {q8}B = {ratio:.1f}x under full-Adam f32 "
+             f"{full_adam}B (ok)")
+
     hl = out["cells"][STEP_HEADLINE]
     out["headline"] = {"cell": STEP_HEADLINE, "speedup": hl["speedup"]}
     here = os.path.dirname(os.path.abspath(__file__))
@@ -464,6 +485,63 @@ def step_bench(quick: bool):
     with open(path, "w") as f:
         json.dump(out, f, indent=1)
     emit("step/json", 0.0, path)
+
+
+# ---------------------------------------------------------------------------
+# Optimizer-state accounting: the full family x codec matrix on the real
+# llama-60m (abstract params, eval_shape only — no allocation), writing
+# BENCH_state_cpu.json.  Gates (always): int8 strictly shrinks every
+# moment-bearing family, and eval_shape bytes are self-consistent across
+# codecs (q + scales never exceed ~27% of the f32 moment slots).
+# ---------------------------------------------------------------------------
+
+def state_bench(quick: bool):
+    import json
+    import os
+
+    from repro import configs, optim
+    from repro.models import lm
+    from repro.optim.engine import state_bytes
+
+    cfg = configs.get_smoke("llama-60m") if quick \
+        else configs.get_config("llama-60m")
+    params = lm.abstract_params(cfg)
+    p_bytes = sum(l.size * jnp.dtype(l.dtype).itemsize
+                  for l in jax.tree_util.tree_leaves(params))
+    families = [("adam", {}), ("adam_mini", {}), ("muon", {}), ("sgd", {}),
+                ("galore", {"rank_frac": 0.25}),
+                ("apollo", {"rank_frac": 0.25}),
+                ("fira", {"rank_frac": 0.25}),
+                ("gwt", {"level": 2})]
+    out = {"config": {"arch": cfg.name, "params_bytes": p_bytes},
+           "cells": {}}
+    for name, kw in families:
+        row = {}
+        for cdc in ("f32", "int8"):
+            opt = optim.make(name, lr=1e-3, state_codec=cdc, **kw)
+            row[cdc] = state_bytes(opt, params)
+        row["int8_saving"] = round(row["f32"] / row["int8"], 3)
+        out["cells"][name] = row
+        emit(f"state/{name}", 0.0,
+             f"f32={row['f32']}B int8={row['int8']}B "
+             f"({row['int8_saving']}x)")
+        if row["int8"] >= row["f32"]:
+            emit(f"state/{name}_codec_ERROR", 0.0,
+                 f"int8 {row['int8']}B does not shrink f32 {row['f32']}B")
+    full_adam = out["cells"]["adam"]["f32"]
+    q8 = out["cells"]["gwt"]["int8"]
+    out["compound"] = {"full_adam_f32_bytes": full_adam,
+                       "gwt_int8_bytes": q8,
+                       "ratio": round(full_adam / q8, 2)}
+    emit("state/compound", 0.0,
+         f"gwt+int8 {q8}B = {full_adam / q8:.1f}x under full-Adam f32 "
+         f"{full_adam}B (params {p_bytes}B)")
+    here = os.path.dirname(os.path.abspath(__file__))
+    path = os.path.join(here, "BENCH_state_cpu_quick.json" if quick
+                        else "BENCH_state_cpu.json")
+    with open(path, "w") as f:
+        json.dump(out, f, indent=1)
+    emit("state/json", 0.0, path)
 
 
 # ---------------------------------------------------------------------------
@@ -764,6 +842,13 @@ CURVE_LEARN_GATE = 0.9   # final loss must be < gate * initial loss
 # initial loss — the gate is a did-it-learn-at-all tripwire, not a
 # quality bar; quality lives in the committed per-cell numbers)
 
+CURVE_TRACK_GATE = 1.25  # gwt2_int8 final loss must stay under this
+# multiple of the gwt2 f32 final loss.  Measured on the fixture corpus
+# the two runs land within run-to-run noise of each other (±~10% of
+# final loss at the 24-step --quick budget, tighter at 72); a broken
+# rounding stream stalls near the ~126-nat initial loss, far past any
+# plausible noise band.
+
 
 def curve_bench(quick: bool):
     import json
@@ -790,6 +875,7 @@ def curve_bench(quick: bool):
                       "corpus_hash": train_src.store.corpus_hash[:12]},
            "cells": {}}
     methods = [("gwt2", "gwt", dict(level=2)),
+               ("gwt2_int8", "gwt", dict(level=2, state_codec="int8")),
                ("adam", "adam", {}),
                ("galore_1_4", "galore", dict(rank_frac=0.25,
                                              update_gap=steps))]
@@ -821,6 +907,23 @@ def curve_bench(quick: bool):
             emit(f"curve/{tag}_learn_gate_ERROR", 0.0,
                  f"final {cell['final_loss']} > {CURVE_LEARN_GATE} * "
                  f"initial {cell['initial_loss']}")
+
+    # quantized tracking gate: the int8 substrate must follow the f32 GWT
+    # curve, not merely "learn" — stochastic rounding is unbiased, so the
+    # two runs should land within noise of each other.
+    f32_final = out["cells"]["gwt2"]["final_loss"]
+    q8_final = out["cells"]["gwt2_int8"]["final_loss"]
+    out["int8_tracking"] = {"final_loss_ratio": round(q8_final / f32_final,
+                                                      4),
+                            "bound": CURVE_TRACK_GATE}
+    if q8_final > CURVE_TRACK_GATE * f32_final:
+        emit("curve/int8_tracking_ERROR", 0.0,
+             f"gwt2_int8 final loss {q8_final} > {CURVE_TRACK_GATE} * "
+             f"gwt2 f32 final {f32_final}")
+    else:
+        emit("curve/int8_tracking_gate", 0.0,
+             f"gwt2_int8 final {q8_final} vs f32 {f32_final} "
+             f"(ratio {q8_final / f32_final:.3f} <= {CURVE_TRACK_GATE}, ok)")
     here = os.path.dirname(os.path.abspath(__file__))
     path = os.path.join(here, "BENCH_curve_cpu_quick.json" if quick
                         else "BENCH_curve_cpu.json")
@@ -839,6 +942,7 @@ TABLES = {
     "kernels": kernels_bench,
     "trace": trace_bench,
     "step": step_bench,
+    "state": state_bench,
     "shard": shard_bench,
     "data": data_bench,
     "curve": curve_bench,

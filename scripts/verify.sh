@@ -35,8 +35,13 @@ echo "== trace/compile benchmark smoke (bucketed engine vs per-leaf) =="
 python -m benchmarks.run --only trace --quick
 
 echo "== train-step runtime benchmark (pipelined loop + donation gate; =="
-echo "== fails on >20% steps/sec regression vs committed BENCH_step_cpu) =="
+echo "== fails on >20% steps/sec regression vs committed BENCH_step_cpu, =="
+echo "== or if gwt+int8 opt state is <10x under full-Adam f32) =="
 python -m benchmarks.run --only step --quick
+
+echo "== optimizer-state substrate accounting (family x codec matrix; =="
+echo "== fails unless int8 shrinks every moment-bearing family) =="
+python -m benchmarks.run --only state --quick
 
 echo "== sharded train path benchmark (8-device sim; fails unless the =="
 echo "== compressed DP wire moves >=2x fewer bytes at level >= 2) =="
@@ -47,8 +52,9 @@ echo "== (fails if process workers are slower than the prefetch thread =="
 echo "== on the tokenization-heavy source) =="
 python -m benchmarks.run --only data --quick
 
-echo "== loss-curve harness: gwt/adam/galore on the fixture corpus =="
-echo "== (fails if any optimizer stops learning) =="
+echo "== loss-curve harness: gwt/gwt+int8/adam/galore on the fixture =="
+echo "== corpus (fails if any optimizer stops learning, or if the =="
+echo "== quantized gwt2_int8 cell stops tracking the gwt2 f32 curve) =="
 python -m benchmarks.run --only curve --quick
 
 if [[ "${1:-}" == "--quick" ]]; then

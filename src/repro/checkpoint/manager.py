@@ -92,6 +92,13 @@ class CheckpointManager:
         with open(os.path.join(self._step_dir(step), "manifest.json")) as f:
             return json.load(f)
 
+    def saved_run(self, step: Optional[int] = None) -> dict:
+        """The ``run_meta`` dict stamped into the saved manifest ({} for
+        checkpoints written before run metadata existed).  The launcher
+        reads ``saved_run().get("state_codec")`` to detect codec changes
+        across ``--resume`` and transcode the optimizer state."""
+        return self.manifest(step).get("run") or {}
+
     # -- save --------------------------------------------------------------
     def _write(self, step: int, tree: Any):
         d = self._step_dir(step)

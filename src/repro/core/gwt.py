@@ -73,15 +73,24 @@ def gwt(lr: Schedule | float,
         wavelet: str = "haar",
         impl: str = "auto",
         bucketed: bool = True,
-        state_shardings=None) -> Optimizer:
+        state_shardings=None,
+        state_codec="f32") -> Optimizer:
     """Build the GWT optimizer. ``host`` in {'adam','adam_mini','muon'};
     ``wavelet`` in {'haar' (paper), 'db2' (beyond-paper Daubechies-4)};
     ``state_shardings`` forwards per-bucket NamedSharding hints (from
     ``distributed.sharding.gwt_state_shardings(...)['buckets']``) to the
-    engine so init/update keep optimizer state on the mesh layout."""
+    engine so init/update keep optimizer state on the mesh layout.
+    ``state_codec`` ('f32'|'int8') selects the moment substrate
+    (``repro.optim.codec``): int8 composes multiplicatively with the
+    wavelet subspace — host moments live on the ``A_l`` band AND are
+    stored blocked-quantized.  On the fused kernel path the requantize
+    epilogue runs inside the kernel (``ops.fused_update_q8``)."""
+    from repro.optim import codec as codec_lib
     if wavelet not in ("haar", "db2"):
         raise ValueError(f"unknown wavelet {wavelet!r}")
     impl = compat.resolve_kernel_impl(impl)
+    cdc = codec_lib.get_codec(state_codec)
+    quant = not cdc.passthrough
     fwd = haar.haar_forward if wavelet == "haar" else haar.db2_forward
     inv = haar.haar_inverse if wavelet == "haar" else haar.db2_inverse
     if isinstance(lr, (int, float)):
@@ -125,7 +134,7 @@ def gwt(lr: Schedule | float,
 
     plain_rule = engine.LeafRule(
         kind=_Mode.PLAIN, init=lambda p: {"host": plain.init(p)},
-        update=plain_update)
+        update=plain_update, slots={"host": plain.slots})
 
     # -- GWT rules: DHT along axis -1 (LAST) or -2 (FIRST) ------------------
     def make_gwt_rule(mode: str) -> engine.LeafRule:
@@ -169,9 +178,35 @@ def gwt(lr: Schedule | float,
                     g_tilde, state["prev_norm"])
             return _apply(p_stk, g_tilde, lr(step), lr_mult, alpha), out
 
+        def vector_update_q8(g_stk, p_stk, state, step, leaf_ids,
+                             codec_key):
+            # codec-native fast path: the kernel dequantizes the blocked
+            # moments, updates, and requantizes in its epilogue — decoded
+            # f32 moments never round-trip through HBM.  Slot salts (m=0,
+            # v=1) match codec.map_slots' sorted-key order, so this path
+            # and the generic scan wrap produce the same rounding bits.
+            from repro.kernels.gwt_adam import ops as gwt_ops  # lazy
+            gt = jnp.swapaxes(g_stk, -1, -2) if swap else g_stk
+            g_tilde, lr_mult, hstate = gwt_ops.fused_update_q8(
+                gt, state["host"], step, codec_key, leaf_ids, level=level,
+                block=cdc.block, impl=impl, **adam_kw)
+            if swap:
+                g_tilde = jnp.swapaxes(g_tilde, -1, -2)
+            out = {"host": hstate, "prev_norm": state["prev_norm"]}
+            if use_limiter:
+                g_tilde, out["prev_norm"] = jax.vmap(
+                    functools.partial(limiter.limit, gamma=gamma))(
+                    g_tilde, state["prev_norm"])
+            return _apply(p_stk, g_tilde, lr(step), lr_mult, alpha), out
+
+        vu, native = None, False
+        if use_fused:
+            vu, native = (vector_update_q8, True) if quant \
+                else (vector_update, False)
         return engine.LeafRule(
-            kind=mode, init=init, update=update,
-            vector_update=vector_update if use_fused else None)
+            kind=mode, init=init, update=update, vector_update=vu,
+            slots={"host": h.slots, "prev_norm": False},
+            codec_native=native)
 
     gwt_last = make_gwt_rule(_Mode.LAST)
     gwt_first = make_gwt_rule(_Mode.FIRST)
@@ -180,7 +215,8 @@ def gwt(lr: Schedule | float,
 
     return engine.build(
         lambda path, leaf: rules[_leaf_mode(path, leaf, level, elig)],
-        bucketed=bucketed, state_shardings=state_shardings)
+        bucketed=bucketed, state_shardings=state_shardings,
+        codec=cdc)
 
 
 # ---------------------------------------------------------------------------

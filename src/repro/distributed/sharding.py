@@ -130,19 +130,28 @@ def _stacked(mesh, spec: P) -> NamedSharding:
 
 
 def gwt_state_shardings(params_abstract, params_axes, mesh, rules: Rules,
-                        level: int, eligible=None, host: str = "adam"):
+                        level: int, eligible=None, host: str = "adam",
+                        state_codec: str = "f32"):
     """NamedSharding tree for the GWT optimizer's bucketed state layout
-    ``{"step", "buckets": {name: {"host": ..., "prev_norm"?}}}``.
+    ``{"step", ["codec_key",] "buckets": {name: {"host": ..., "prev_norm"?}}}``.
 
     Each bucket stacks same-shape leaves.  The host moments get the spec
     shared by *all* members' logical axes; when same-shape members resolve
     to different specs (e.g. ``attn/wq`` ('embed','heads') vs ``attn/wo``
     ('heads','embed') when ``H·hd == d`` — the engine buckets by shape
     only), the bucket's state is replicated rather than mis-sharding half
-    the stack with a transposed partitioning."""
+    the stack with a transposed partitioning.
+
+    Under a quantizing ``state_codec`` each moment leaf becomes an encoded
+    slot ``{"q": int8, "scale": f32}``: ``q`` keeps the moment's spec (same
+    shape, just narrower dtype); the per-block ``scale`` vector is tiny
+    (size/64 f32) and blocks don't align with any logical axis, so it is
+    replicated."""
     from repro.core.gwt import _Mode, gwt as gwt_optimizer
     from repro.optim.base import flatten_with_paths
+    from repro.optim import codec as codec_lib
     mesh = compat.unwrap_mesh(mesh)
+    quant = not codec_lib.get_codec(state_codec).passthrough
 
     opt = gwt_optimizer(lr=0.0, level=level, host=host, eligible=eligible,
                         impl="jnp")
@@ -164,21 +173,27 @@ def gwt_state_shardings(params_abstract, params_axes, mesh, rules: Rules,
         a_shape = shape[:-1] + (shape[-1] >> level,)
         return spec_for(a_shape, Axes(names), mesh, rules)
 
+    def slot(sh):
+        return {"q": sh, "scale": rep} if quant else sh
+
     bucket_shardings = {}
     for b in plan.buckets:
         specs = {member_spec(b.rule.kind, i) for i in b.indices}
         sh = _stacked(mesh, specs.pop()) if len(specs) == 1 else rep
-        host_sh = {"m": sh, "v": sh}
+        host_sh = {"m": slot(sh), "v": slot(sh)}
         if host == "adam_mini":
-            host_sh["v"] = rep
+            host_sh["v"] = slot(rep)
         if b.rule.kind == _Mode.PLAIN:
             # plain leaves run Adam under a MUON host (module-wise policy)
             bucket_shardings[b.name] = {"host": host_sh}
         else:
             if host == "muon":
-                host_sh = {"m": sh}
+                host_sh = {"m": slot(sh)}
             bucket_shardings[b.name] = {"host": host_sh, "prev_norm": rep}
-    return {"step": rep, "buckets": bucket_shardings}
+    out = {"step": rep, "buckets": bucket_shardings}
+    if quant:
+        out["codec_key"] = rep
+    return out
 
 
 class StepShardings(NamedTuple):
@@ -202,7 +217,8 @@ def replicated_like(tree, mesh):
 def train_step_shardings(cfg, mod, batch_abstract, mesh, *,
                          optimizer_name: str = "gwt", level: int = 2,
                          host: str = "adam", eligible=None,
-                         shard_params: bool = True) -> StepShardings:
+                         shard_params: bool = True,
+                         state_codec: str = "f32") -> StepShardings:
     """One-stop sharding-tree builder for the sharded train path
     (launch/train.py, benchmarks, tests).
 
@@ -224,7 +240,8 @@ def train_step_shardings(cfg, mod, batch_abstract, mesh, *,
     opt_sh = None
     if optimizer_name == "gwt":
         opt_sh = gwt_state_shardings(params_abs, params_axes, mesh, rules,
-                                     level, eligible=eligible, host=host)
+                                     level, eligible=eligible, host=host,
+                                     state_codec=state_codec)
     return StepShardings(params_sh, opt_sh, batch_sh)
 
 

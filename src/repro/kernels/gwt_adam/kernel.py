@@ -28,11 +28,14 @@ reduced from the per-tile partials this kernel emits.
 from __future__ import annotations
 
 import functools
-from typing import Tuple
+import math
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro.optim import codec as codec_lib
 
 INV_SQRT2 = 0.7071067811865476
 
@@ -41,35 +44,10 @@ def _body(level: int, b1: float, b2: float, eps: float,
           g_ref, m_ref, v_ref,
           gt_ref, m_out_ref, v_out_ref, ssq_ref):
     x = g_ref[...].astype(jnp.float32)
-    bm, bn = x.shape
-
-    # ---- forward butterfly, keep all detail bands in registers ----
-    a = x
-    details = []
-    for _ in range(level):
-        pairs = a.reshape(bm, a.shape[-1] // 2, 2)
-        even, odd = pairs[..., 0], pairs[..., 1]
-        a = (even + odd) * INV_SQRT2
-        details.append((even - odd) * INV_SQRT2)  # [D_1 .. D_l] (fine->coarse)
-
-    # ---- Adam moment update on the approximation band ----
-    m = b1 * m_ref[...].astype(jnp.float32) + (1.0 - b1) * a
-    v = b2 * v_ref[...].astype(jnp.float32) + (1.0 - b2) * a * a
-    inv_denom = 1.0 / (jnp.sqrt(v) + eps)
-    a_t = m * inv_denom
-
-    # ---- scale details by the upsampled preconditioner, inverse butterfly --
-    x = a_t
-    for k in range(level, 0, -1):          # coarsest band first
-        d = details[k - 1]
-        reps = 1 << (level - k)
-        scale = inv_denom if reps == 1 else jnp.repeat(inv_denom, reps, axis=-1)
-        d_t = d * scale
-        even = (x + d_t) * INV_SQRT2
-        odd = (x - d_t) * INV_SQRT2
-        x = jnp.stack([even, odd], axis=-1).reshape(bm, x.shape[-1] * 2)
-
-    out = x.astype(gt_ref.dtype)
+    out, m, v = _dht_adam_core(x, m_ref[...].astype(jnp.float32),
+                               v_ref[...].astype(jnp.float32),
+                               level, b1, b2, eps)
+    out = out.astype(gt_ref.dtype)
     gt_ref[...] = out
     m_out_ref[...] = m.astype(m_out_ref.dtype)
     v_out_ref[...] = v.astype(v_out_ref.dtype)
@@ -94,6 +72,164 @@ def _pick_blocks(m: int, n: int, level: int) -> Tuple[int, int]:
     if m % bm != 0:
         bm = m
     return bm, bn
+
+
+def _dht_adam_core(x, m_st, v_st, level, b1, b2, eps):
+    """Forward butterfly → Adam on A → scaled-detail inverse butterfly.
+    Shared by the f32 body and the q8 (blocked-int8 moments) body."""
+    bm = x.shape[0]
+    a = x
+    details = []
+    for _ in range(level):
+        pairs = a.reshape(bm, a.shape[-1] // 2, 2)
+        even, odd = pairs[..., 0], pairs[..., 1]
+        a = (even + odd) * INV_SQRT2
+        details.append((even - odd) * INV_SQRT2)
+
+    m = b1 * m_st + (1.0 - b1) * a
+    v = b2 * v_st + (1.0 - b2) * a * a
+    inv_denom = 1.0 / (jnp.sqrt(v) + eps)
+
+    x = m * inv_denom
+    for k in range(level, 0, -1):
+        d = details[k - 1]
+        reps = 1 << (level - k)
+        scale = inv_denom if reps == 1 else jnp.repeat(inv_denom, reps, axis=-1)
+        d_t = d * scale
+        even = (x + d_t) * INV_SQRT2
+        odd = (x - d_t) * INV_SQRT2
+        x = jnp.stack([even, odd], axis=-1).reshape(bm, x.shape[-1] * 2)
+    return x, m, v
+
+
+def _body_q8(level: int, b1: float, b2: float, eps: float, block: int,
+             g_ref, qm_ref, sm_ref, qv_ref, sv_ref, saltm_ref, saltv_ref,
+             gt_ref, qm_out_ref, sm_out_ref, qv_out_ref, sv_out_ref,
+             ssq_ref):
+    """q8 body: dequantize blocked-int8 moment tiles, run the fused DHT-Adam
+    core, stochastically requantize in the epilogue.  The grid tiles ROWS
+    only (full-width blocks), so each tile's row-major flat range is
+    block-aligned and scale blocks never straddle tiles."""
+    x = g_ref[...].astype(jnp.float32)
+    bm, bn = x.shape
+    bna = bn >> level
+    sb = (bm * bna) // block
+
+    def dequant(q_ref, s_ref):
+        q = q_ref[...].astype(jnp.float32).reshape(sb, block)
+        return (q * s_ref[...][:, 0][:, None]).reshape(bm, bna)
+
+    out, m, v = _dht_adam_core(x, dequant(qm_ref, sm_ref),
+                               dequant(qv_ref, sv_ref), level, b1, b2, eps)
+
+    gt = out.astype(gt_ref.dtype)
+    gt_ref[...] = gt
+    xr = gt.astype(jnp.float32)
+    ssq_ref[0, 0] = jnp.sum(xr * xr)
+
+    # ---- requant epilogue: global flat element index -> rounding bits ----
+    base = pl.program_id(0) * (bm * bna)
+    idx = (base
+           + jax.lax.broadcasted_iota(jnp.int32, (sb, block), 0) * block
+           + jax.lax.broadcasted_iota(jnp.int32, (sb, block), 1))
+
+    def requant(arr, salt, q_out, s_out):
+        blocks = arr.reshape(sb, block)
+        absmax = jnp.max(jnp.abs(blocks), axis=1)
+        scale = absmax * jnp.float32(1.0 / 127.0)
+        inv = jnp.where(scale > 0, 1.0 / scale, 0.0).astype(jnp.float32)
+        y = blocks * inv[:, None]
+        lo = jnp.floor(y)
+        q = lo + (codec_lib.uniform01(salt, idx) < (y - lo)).astype(
+            jnp.float32)
+        q_out[...] = jnp.clip(q, -127.0, 127.0).astype(jnp.int8).reshape(
+            bm, bna)
+        s_out[...] = scale[:, None]
+
+    requant(m, saltm_ref[0, 0], qm_out_ref, sm_out_ref)
+    requant(v, saltv_ref[0, 0], qv_out_ref, sv_out_ref)
+
+
+def q8_row_block(m: int, n: int, level: int,
+                 block: int) -> Optional[int]:
+    """Row-tile height for the q8 kernel, or None when the shape cannot be
+    tiled block-aligned (caller falls back to the jnp oracle).  ``bm`` must
+    divide ``m`` and keep ``bm·na`` a multiple of ``block`` so per-tile
+    scale slices are whole blocks."""
+    na = n >> level
+    if na == 0 or (m * na) % block != 0:
+        return None
+    step = block // math.gcd(na, block)
+    best = None
+    for bm in range(step, m + 1, step):
+        if m % bm:
+            continue
+        if 4 * bm * n * 4 <= 4 * 1024 * 1024 or best is None:
+            best = bm
+        else:
+            break
+    return best
+
+
+def gwt_adam_tile_q8(g: jax.Array, qm: jax.Array, sm: jax.Array,
+                     qv: jax.Array, sv: jax.Array,
+                     salt_m: jax.Array, salt_v: jax.Array, *,
+                     level: int, block: int, b1: float = 0.9,
+                     b2: float = 0.999, eps: float = 1e-6,
+                     interpret: bool = False):
+    """Fused q8 update for one 2-D leaf: blocked-int8 moments in/out.
+
+    ``qm/qv``: int8 ``(m, n>>level)``; ``sm/sv``: f32 ``(nb,)`` flat-block
+    scales; ``salt_m/salt_v``: uint32 rounding salts (slot-specific, from
+    ``codec.slot_salt``).  Returns ``(gt, qm', sm', qv', sv', ssq)`` with
+    ``ssq`` shaped ``(grid_m, 1)``.
+    """
+    mm, nn = g.shape
+    if nn % (1 << level) != 0:
+        raise ValueError(f"n={nn} not divisible by 2^{level}")
+    bm = q8_row_block(mm, nn, level, block)
+    if bm is None:
+        raise ValueError(f"q8 kernel: ({mm},{nn}) level={level} not "
+                         f"block-{block} alignable — use the jnp oracle")
+    na = nn >> level
+    nb = (mm * na) // block
+    sb = (bm * na) // block
+    gm = mm // bm
+    sm2, sv2 = sm.reshape(nb, 1), sv.reshape(nb, 1)
+    u32 = jnp.uint32
+    saltm2 = jnp.asarray(salt_m, u32).reshape(1, 1)
+    saltv2 = jnp.asarray(salt_v, u32).reshape(1, 1)
+    scalar = pl.BlockSpec((1, 1), lambda i: (0, 0))
+    gt, qm2, smo, qv2, svo, ssq = pl.pallas_call(
+        functools.partial(_body_q8, level, b1, b2, eps, block),
+        grid=(gm,),
+        in_specs=[
+            pl.BlockSpec((bm, nn), lambda i: (i, 0)),
+            pl.BlockSpec((bm, na), lambda i: (i, 0)),
+            pl.BlockSpec((sb, 1), lambda i: (i, 0)),
+            pl.BlockSpec((bm, na), lambda i: (i, 0)),
+            pl.BlockSpec((sb, 1), lambda i: (i, 0)),
+            scalar, scalar,
+        ],
+        out_specs=[
+            pl.BlockSpec((bm, nn), lambda i: (i, 0)),
+            pl.BlockSpec((bm, na), lambda i: (i, 0)),
+            pl.BlockSpec((sb, 1), lambda i: (i, 0)),
+            pl.BlockSpec((bm, na), lambda i: (i, 0)),
+            pl.BlockSpec((sb, 1), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((mm, nn), g.dtype),
+            jax.ShapeDtypeStruct((mm, na), jnp.int8),
+            jax.ShapeDtypeStruct((nb, 1), jnp.float32),
+            jax.ShapeDtypeStruct((mm, na), jnp.int8),
+            jax.ShapeDtypeStruct((nb, 1), jnp.float32),
+            jax.ShapeDtypeStruct((gm, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(g, qm, sm2, qv, sv2, saltm2, saltv2)
+    return gt, qm2, smo.reshape(nb), qv2, svo.reshape(nb), ssq
 
 
 def gwt_adam_tile(g: jax.Array, m_st: jax.Array, v_st: jax.Array, *,

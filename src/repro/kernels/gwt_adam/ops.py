@@ -67,3 +67,70 @@ def _fused_update(g, state, step, *, level, b1, b2, eps, impl):
     t = step.astype(jnp.float32) + 1.0
     lr_mult = jnp.sqrt(1 - b2 ** t) / (1 - b1 ** t)
     return gt, lr_mult, {"m": m, "v": v}
+
+
+# ---------------------------------------------------------------------------
+# q8 path: blocked-int8 moments (state codec 'int8'), requant fused in.
+# ---------------------------------------------------------------------------
+
+def _tile_fn_q8(impl: str, shape, level: int, block: int,
+                b1: float, b2: float, eps: float):
+    """Per-(impl, leaf-shape) q8 tile function.  The Pallas path needs
+    block-aligned row tiles (``kernel.q8_row_block``); shapes it cannot
+    tile fall back to the jnp oracle — a static, per-bucket decision."""
+    if impl in ("pallas", "interpret") and \
+            kernel.q8_row_block(shape[-2], shape[-1], level, block) is not None:
+        return functools.partial(kernel.gwt_adam_tile_q8, level=level,
+                                 block=block, b1=b1, b2=b2, eps=eps,
+                                 interpret=impl == "interpret")
+    return functools.partial(ref.gwt_adam_tile_q8, level=level, block=block,
+                             b1=b1, b2=b2, eps=eps)
+
+
+def fused_update_q8(g: jax.Array, state: dict, step: jax.Array,
+                    key: jax.Array, leaf_ids: jax.Array, *,
+                    level: int, block: int = 64, b1: float = 0.9,
+                    b2: float = 0.999, eps: float = 1e-6,
+                    impl: str = "auto") -> Tuple[jax.Array, jax.Array, dict]:
+    """``fused_update`` over blocked-int8 moments: ``state`` is the encoded
+    layout ``{"m": {"q", "scale"}, "v": {"q", "scale"}}``; dequant → update
+    → stochastic requant happens inside the tile (Pallas epilogue or jnp
+    oracle).  ``key`` is ``opt_state["codec_key"]``; ``leaf_ids`` the
+    bucket's flatten-order leaf indices (scalar for a single leaf) — the
+    per-slot salts (m=0, v=1) match ``codec.map_slots`` order, so this
+    path rounds identically to the engine's generic scan wrap."""
+    impl = compat.resolve_kernel_impl(impl)
+    return _fused_update_q8(g, state["m"]["q"], state["m"]["scale"],
+                            state["v"]["q"], state["v"]["scale"],
+                            step, key, leaf_ids, level=level, block=block,
+                            b1=b1, b2=b2, eps=eps, impl=impl)
+
+
+@functools.partial(jax.jit, static_argnames=("level", "block", "b1", "b2",
+                                             "eps", "impl"))
+def _fused_update_q8(g, qm, sm, qv, sv, step, key, leaf_ids, *,
+                     level, block, b1, b2, eps, impl):
+    from repro.optim import codec as codec_lib
+    salt_m = codec_lib.slot_salt(key, step, 0, leaf_ids)
+    salt_v = codec_lib.slot_salt(key, step, 1, leaf_ids)
+    if g.ndim > 2:  # stacked scan leaves (L, *extra, m, n)
+        # The codec blocks/salts over each leaf's row-major FLAT order, so
+        # a 3-D+ leaf's extra dims can't become vmap axes (scales and
+        # rounding indices span them).  Merging them into the row axis
+        # keeps the flat order bit-identical and the DHT is per-row, so
+        # the tile math is unchanged; vmap only over the leaf axis L.
+        row = lambda a: a.reshape(a.shape[0], -1, a.shape[-1])
+        g2 = row(g)
+        fn = _tile_fn_q8(impl, g2.shape, level, block, b1, b2, eps)
+        gt, qm2, sm2, qv2, sv2, _ = jax.vmap(fn)(
+            g2, row(qm), sm, row(qv), sv,
+            salt_m.reshape(-1), salt_v.reshape(-1))
+        gt = gt.reshape(g.shape)
+        qm2, qv2 = qm2.reshape(qm.shape), qv2.reshape(qv.shape)
+    else:
+        fn = _tile_fn_q8(impl, g.shape, level, block, b1, b2, eps)
+        gt, qm2, sm2, qv2, sv2, _ = fn(g, qm, sm, qv, sv, salt_m, salt_v)
+    t = step.astype(jnp.float32) + 1.0
+    lr_mult = jnp.sqrt(1 - b2 ** t) / (1 - b1 ** t)
+    return gt, lr_mult, {"m": {"q": qm2, "scale": sm2},
+                         "v": {"q": qv2, "scale": sv2}}

@@ -37,3 +37,36 @@ def gwt_adam_tile(g: jax.Array, m_st: jax.Array, v_st: jax.Array, *,
     gr = gt.astype(jnp.float32)
     ssq = jnp.sum(gr * gr)[None, None]
     return (gt, m.astype(m_st.dtype), v.astype(v_st.dtype), ssq)
+
+
+@functools.partial(jax.jit, static_argnames=("level", "block", "b1", "b2",
+                                             "eps"))
+def gwt_adam_tile_q8(g: jax.Array, qm: jax.Array, sm: jax.Array,
+                     qv: jax.Array, sv: jax.Array,
+                     salt_m: jax.Array, salt_v: jax.Array, *,
+                     level: int, block: int, b1: float = 0.9,
+                     b2: float = 0.999, eps: float = 1e-6):
+    """q8 oracle: blocked-int8 moments in, blocked-int8 moments out.
+
+    Dequantize → ``gwt_adam_tile`` math → stochastic requantize with the
+    caller-supplied per-slot salts (``repro.optim.codec`` hash — the same
+    bits the Pallas epilogue and the engine's generic scan wrap produce).
+    Returns ``(gt, qm', sm', qv', sv', ssq)``.
+    """
+    from repro.optim import codec as codec_lib
+    m_st = codec_lib.blocked_dequant(qm, sm, block)
+    v_st = codec_lib.blocked_dequant(qv, sv, block)
+    g32 = g.astype(jnp.float32)
+    a, details = haar.haar_forward(g32, level)
+    m = b1 * m_st + (1 - b1) * a
+    v = b2 * v_st + (1 - b2) * a * a
+    inv_denom = 1.0 / (jnp.sqrt(v) + eps)
+    a_t = m * inv_denom
+    tilde_d = [d * haar.detail_scale_upsample(inv_denom, level, level - i)
+               for i, d in enumerate(details)]
+    gt = haar.haar_inverse(a_t, tilde_d).astype(g.dtype)
+    gr = gt.astype(jnp.float32)
+    ssq = jnp.sum(gr * gr)[None, None]
+    qm2, sm2 = codec_lib.blocked_quant(m, salt_m, block)
+    qv2, sv2 = codec_lib.blocked_quant(v, salt_v, block)
+    return (gt, qm2, sm2, qv2, sv2, ssq)

@@ -54,6 +54,15 @@ def main(argv=None):
     ap.add_argument("--level", type=int, default=2)
     ap.add_argument("--host", default="adam",
                     choices=["adam", "adam_mini", "muon"])
+    ap.add_argument("--state-codec", default="f32",
+                    choices=["f32", "int8"],
+                    help="optimizer-state substrate: 'f32' = raw moments "
+                         "(bitwise-identical to the pre-codec engine), "
+                         "'int8' = blocked 8-bit moments (per-64-block "
+                         "absmax scale, stochastic rounding; composes "
+                         "with any --optimizer).  --resume transcodes "
+                         "when the checkpoint was written under the "
+                         "other codec")
     ap.add_argument("--alpha", type=float, default=0.25)
     ap.add_argument("--lr", type=float, default=0.01)
     ap.add_argument("--steps", type=int, default=200)
@@ -198,16 +207,17 @@ def main(argv=None):
         shardings = shr.train_step_shardings(
             cfg, mod, batch_abs, ctx.mesh, optimizer_name=args.optimizer,
             level=args.level, host=args.host,
-            shard_params=args.shard_params == "auto")
+            shard_params=args.shard_params == "auto",
+            state_codec=args.state_codec)
 
-    opt_kw = {}
+    opt_kw = {"state_codec": args.state_codec}
     if args.optimizer == "gwt":
-        opt_kw = {"level": args.level, "alpha": args.alpha, "host": args.host,
-                  "impl": ctx.kernel_impl}
+        opt_kw.update({"level": args.level, "alpha": args.alpha,
+                       "host": args.host, "impl": ctx.kernel_impl})
         if shardings is not None and shardings.opt is not None:
             opt_kw["state_shardings"] = shardings.opt["buckets"]
     elif args.optimizer in ("galore", "apollo", "fira"):
-        opt_kw = {"rank_frac": 0.25, "alpha": args.alpha}
+        opt_kw.update({"rank_frac": 0.25, "alpha": args.alpha})
     optimizer = make_optimizer(args.optimizer, args.lr, args.steps, **opt_kw)
 
     opt_shardings = None
@@ -234,11 +244,17 @@ def main(argv=None):
         opt_shardings = {"opt": opt_shardings, "dp_ef": ef_sh}
 
     # Exact accounting for the *actual* optimizer/host (eval_shape over the
-    # real init — no Adam-shaped approximation for non-GWT runs).
+    # real init — no Adam-shaped approximation for non-GWT runs), plus the
+    # compound compression factor vs the full-Adam f32 reference point the
+    # paper's memory tables are normalized to.
     from repro.optim.engine import state_bytes
     mem_bytes = state_bytes(optimizer, params)
+    adam_f32_bytes = state_bytes(optim.make("adam", lr=args.lr), params)
     print(f"arch={cfg.name} params={n_params/1e6:.1f}M "
-          f"optimizer={args.optimizer} opt_state={mem_bytes/2**20:.1f}MiB")
+          f"optimizer={args.optimizer} codec={args.state_codec} "
+          f"opt_state={mem_bytes/2**20:.2f}MiB "
+          f"({adam_f32_bytes/max(mem_bytes, 1):.1f}x smaller than "
+          f"full-Adam f32 {adam_f32_bytes/2**20:.2f}MiB)")
     if dp_spec is not None:
         from repro.distributed.compression import tree_wire_bytes
         grads_abs = jax.tree.map(
@@ -255,7 +271,8 @@ def main(argv=None):
                                      ctx=ctx, dp_reduce=dp_spec,
                                      shardings=shardings)
     ckpt = CheckpointManager(args.ckpt_dir,
-                             run_meta={"data": data_meta}) \
+                             run_meta={"data": data_meta,
+                                       "state_codec": args.state_codec}) \
         if args.ckpt_dir else None
     start = 0
     if args.resume and ckpt is not None and ckpt.latest_step() is not None:
@@ -277,24 +294,54 @@ def main(argv=None):
                                                  "opt": opt_state},
                                           shardings=restore_sh, ctx=ctx)
         except StructureMismatch as e:
-            # Only a pre-engine checkpoint (per-leaf tuple optimizer state,
-            # "'leaves'" in its treedef) gets the migration path; a
-            # mismatching *bucketed* checkpoint means the optimizer/model
-            # config changed since the save — report that, don't guess.
-            # (Error-feedback runs postdate the legacy layout entirely.)
-            if ef_wrap or \
-                    "'leaves'" not in ckpt.manifest().get("treedef", ""):
+            # Two recoverable shapes of mismatch: a pre-engine checkpoint
+            # (per-leaf tuple optimizer state, "'leaves'" in its treedef)
+            # and a codec change (the saved manifest's run.state_codec
+            # differs from --state-codec).  Anything else means the
+            # optimizer/model config changed since the save — report
+            # that, don't guess.  (Error-feedback runs postdate the
+            # legacy layout and stay unmigrated either way.)
+            from repro.optim import engine as engine_mod
+            saved_codec = ckpt.saved_run().get("state_codec", "f32")
+            legacy = "'leaves'" in ckpt.manifest().get("treedef", "")
+            if ef_wrap or not (legacy or saved_codec != args.state_codec):
                 raise StructureMismatch(
                     f"checkpoint in {ckpt.dir} is bucketed but does not "
                     f"match this run's optimizer state — did --optimizer/"
                     f"--level/--host or the model config change since it "
                     f"was saved? ({e})") from e
-            legacy = optimizer.engine.legacy_like(params)
+            if legacy:
+                # legacy layouts are raw f32 by construction
+                like = optimizer.engine.legacy_like(params)
+            else:
+                saved_opt = make_optimizer(args.optimizer, args.lr,
+                                           args.steps,
+                                           **{**opt_kw,
+                                              "state_codec": saved_codec})
+                like = jax.eval_shape(saved_opt.init, params)
             (state, start) = ckpt.restore(None, {"params": params,
-                                                 "opt": legacy}, ctx=ctx)
-            state["opt"] = optimizer.engine.migrate_legacy(state["opt"],
-                                                           params)
-            print("migrated legacy per-leaf optimizer state -> buckets")
+                                                 "opt": like}, ctx=ctx)
+            if legacy:
+                state["opt"] = optimizer.engine.migrate_legacy(state["opt"],
+                                                               params)
+                print("migrated legacy per-leaf optimizer state -> buckets")
+                if args.state_codec != "f32":
+                    f32_opt = make_optimizer(args.optimizer, args.lr,
+                                             args.steps,
+                                             **{**opt_kw,
+                                                "state_codec": "f32"})
+                    state["opt"] = engine_mod.transcode(
+                        state["opt"], params, f32_opt, optimizer)
+                    print(f"transcoded optimizer state f32 -> "
+                          f"{args.state_codec}")
+            else:
+                state["opt"] = engine_mod.transcode(
+                    state["opt"], params, saved_opt, optimizer)
+                print(f"transcoded optimizer state {saved_codec} -> "
+                      f"{args.state_codec}")
+                if opt_shardings is not None:
+                    state["opt"] = jax.device_put(state["opt"],
+                                                  opt_shardings)
         params, opt_state = state["params"], state["opt"]
         print(f"resumed from step {start}")
 

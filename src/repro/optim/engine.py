@@ -26,12 +26,22 @@ per leaf.  This engine replaces all three loops:
 State layout::
 
     {"step": i32[],
+     ["codec_key": u32[],]                # quantizing codecs only
      "buckets": {"<kind>__<path>": <stacked per-leaf state pytree>, ...}}
 
 The per-leaf state inside a bucket is exactly what the pre-engine
 optimizers stored per leaf, so migration from the legacy
 ``{"step", "leaves": (...,)}`` tuple layout is a pure regrouping
 (:meth:`Engine.migrate_legacy` / :meth:`Engine.to_legacy`).
+
+**State substrate (DESIGN.md §8):** rules declare which state arrays are
+*moment slots* (``LeafRule.slots``); :func:`build` takes a ``codec``
+(``repro.optim.codec``) and stores slot arrays encoded — dequantize →
+update → requantize fused into the per-bucket scan body (or handed whole
+to a ``codec_native`` ``vector_update``, e.g. the fused GWT-Adam q8
+kernel).  The default ``f32`` codec short-circuits every wrapper, so its
+update graphs are bitwise-identical to the pre-codec engine.  Migration
+between codecs on resume is :func:`transcode`.
 
 Custom rules: pass any ``assign(path, leaf) -> LeafRule`` to :func:`build`
 (see DESIGN.md and the README rule table).
@@ -44,6 +54,7 @@ from typing import Any, Callable, NamedTuple, Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.optim import codec as codec_lib
 from repro.optim.base import Optimizer, flatten_with_paths
 
 
@@ -65,6 +76,14 @@ class LeafRule(NamedTuple):
       leaf_ids) -> (new_p_stk, new_state_stk)`` over the whole ``(L, ...)``
       stack in one call; used instead of the scan when present (fused
       kernels).
+    * ``slots`` — bool pytree mirroring the per-leaf state structure:
+      True marks a *moment slot* the state codec may re-encode (int8 etc.).
+      ``None`` = no slots; the codec never touches this rule's state.
+    * ``codec_native`` — the rule's ``vector_update`` handles encoded
+      slots itself (signature grows a trailing ``codec_key``); the engine
+      passes the encoded bucket straight through instead of wrapping with
+      generic decode/encode (the fused GWT-Adam q8 kernel requantizes in
+      its epilogue).
     """
 
     kind: str
@@ -72,6 +91,8 @@ class LeafRule(NamedTuple):
     update: Callable[..., Tuple[jax.Array, Any]]
     sig: Tuple = ()
     vector_update: Optional[Callable[..., Tuple[jax.Array, Any]]] = None
+    slots: Any = None
+    codec_native: bool = False
 
 
 class Bucket(NamedTuple):
@@ -122,19 +143,30 @@ class Engine:
     """Plan/migration companion of an engine-built :class:`Optimizer`."""
 
     def __init__(self, assign: Callable[[str, Any], LeafRule],
-                 bucketed: bool = True):
+                 bucketed: bool = True, codec="f32", codec_seed: int = 0):
         self.assign = assign
         self.bucketed = bucketed
+        self.codec = codec_lib.get_codec(codec)
+        self.codec_seed = codec_seed
 
     def plan(self, params) -> LeafPlan:
         return build_plan(self.assign, params)
+
+    def codec_key(self) -> Optional[jax.Array]:
+        """The concrete uint32 rounding key ``init`` stores in
+        ``opt_state["codec_key"]`` (None for passthrough codecs)."""
+        if self.codec.passthrough:
+            return None
+        return codec_lib.make_key(self.codec_seed)
 
     # -- legacy tuple-layout interop ---------------------------------------
     def legacy_like(self, params):
         """Abstract state in the pre-engine layout ``{"step", "leaves"}``
         (per-leaf states as a flatten-order tuple) — used as the ``like``
-        tree when restoring an old checkpoint.  ShapeDtypeStruct leaves:
-        no allocation."""
+        tree when restoring an old checkpoint.  Legacy checkpoints predate
+        the codec layer, so states here are raw (f32) regardless of this
+        engine's codec; transcode after migrating.  ShapeDtypeStruct
+        leaves: no allocation."""
         def build(p):
             paths, leaves, _ = flatten_with_paths(p)
             per_leaf = tuple(self.assign(pa, l).init(l)
@@ -184,8 +216,19 @@ def _constrain_bucket(state, sharding_tree):
                                   state, sharding_tree)
 
 
+def _decode_stacked(codec, mask, st):
+    return jax.vmap(lambda s: codec_lib.tree_decode(codec, mask, s))(st)
+
+
+def _encode_stacked(codec, mask, st, key, step, lids):
+    return jax.vmap(
+        lambda s, lid: codec_lib.tree_encode(codec, mask, s, key, step,
+                                             lid))(st, lids)
+
+
 def build(assign: Callable[[str, Any], LeafRule],
-          bucketed: bool = True, state_shardings=None) -> Optimizer:
+          bucketed: bool = True, state_shardings=None,
+          codec="f32", codec_seed: int = 0) -> Optimizer:
     """Build an :class:`Optimizer` from a leaf-rule assignment.
 
     ``bucketed=True`` (default) executes one scan / vectorized kernel call
@@ -198,22 +241,41 @@ def build(assign: Callable[[str, Any], LeafRule],
     bucket's stacked state on its hinted layout and ``update`` re-pins the
     new state, so the sharded train path never round-trips optimizer
     state through an unconstrained (GSPMD's-choice) layout.
+
+    ``codec`` — state-substrate codec (name or instance, see
+    ``repro.optim.codec``).  Rule state arrays marked in ``rule.slots``
+    are stored encoded; decode → update → requantize happens per leaf
+    inside the scan body (never materializing a decoded bucket), or inside
+    a ``codec_native`` rule's own fused ``vector_update``.  ``codec_seed``
+    derives the stochastic-rounding key carried in the state.
     """
-    eng = Engine(assign, bucketed)
+    eng = Engine(assign, bucketed, codec=codec, codec_seed=codec_seed)
+    cdc = eng.codec
+    quant = not cdc.passthrough
     hints = state_shardings or {}
 
     def init(params):
         plan = eng.plan(params)
         _, leaves, _ = flatten_with_paths(params)
+
+        def leaf_init(rule, leaf):
+            st = rule.init(leaf)
+            return codec_lib.tree_init(cdc, rule.slots, st) if quant else st
+
         buckets = {
             b.name: _constrain_bucket(
-                _stack_states([b.rule.init(leaves[i]) for i in b.indices]),
+                _stack_states([leaf_init(b.rule, leaves[i])
+                               for i in b.indices]),
                 hints.get(b.name))
             for b in plan.buckets}
-        return {"step": jnp.zeros((), jnp.int32), "buckets": buckets}
+        out = {"step": jnp.zeros((), jnp.int32), "buckets": buckets}
+        if quant:
+            out["codec_key"] = eng.codec_key()
+        return out
 
     def update(grads, state, params):
         step = state["step"]
+        key = state.get("codec_key")
         plan = eng.plan(params)
         _, gleaves, treedef = flatten_with_paths(grads)
         pleaves = jax.tree_util.tree_leaves(params)
@@ -222,9 +284,22 @@ def build(assign: Callable[[str, Any], LeafRule],
         for b in plan.buckets:
             st = state["buckets"][b.name]
             lids = jnp.asarray(b.indices, jnp.int32)
+            coded = quant and b.rule.slots is not None
+
+            def leaf_update(g, p, s, lid, rule=b.rule, coded=coded):
+                # dequant -> update -> requant, fused per leaf: the decoded
+                # f32 moments live only inside this body's trace.
+                if coded:
+                    s = codec_lib.tree_decode(cdc, rule.slots, s)
+                new_p, ns = rule.update(g, p, s, step, lid)
+                if coded:
+                    ns = codec_lib.tree_encode(cdc, rule.slots, ns, key,
+                                               step, lid)
+                return new_p, ns
+
             if not bucketed:
-                outs = [b.rule.update(gleaves[i], pleaves[i],
-                                      _slice_state(st, j), step, lids[j])
+                outs = [leaf_update(gleaves[i], pleaves[i],
+                                    _slice_state(st, j), lids[j])
                         for j, i in enumerate(b.indices)]
                 np_stk = jnp.stack([o[0] for o in outs])
                 ns = _stack_states([o[1] for o in outs])
@@ -232,26 +307,66 @@ def build(assign: Callable[[str, Any], LeafRule],
                 g_stk = jnp.stack([gleaves[i] for i in b.indices])
                 p_stk = jnp.stack([pleaves[i] for i in b.indices])
                 if b.rule.vector_update is not None:
-                    np_stk, ns = b.rule.vector_update(g_stk, p_stk, st, step,
-                                                      lids)
+                    if coded and b.rule.codec_native:
+                        np_stk, ns = b.rule.vector_update(
+                            g_stk, p_stk, st, step, lids, key)
+                    elif coded:
+                        dec = _decode_stacked(cdc, b.rule.slots, st)
+                        np_stk, ns = b.rule.vector_update(g_stk, p_stk, dec,
+                                                          step, lids)
+                        ns = _encode_stacked(cdc, b.rule.slots, ns, key,
+                                             step, lids)
+                    else:
+                        np_stk, ns = b.rule.vector_update(g_stk, p_stk, st,
+                                                          step, lids)
                 else:
-                    def body(_, xs, rule=b.rule):
+                    def body(_, xs):
                         g, p, s, lid = xs
-                        return None, rule.update(g, p, s, step, lid)
+                        return None, leaf_update(g, p, s, lid)
                     _, (np_stk, ns) = jax.lax.scan(
                         body, None, (g_stk, p_stk, st, lids))
             new_buckets[b.name] = _constrain_bucket(ns, hints.get(b.name))
             for j, i in enumerate(b.indices):
                 new_leaves[i] = np_stk[j]
-        return (jax.tree_util.tree_unflatten(treedef, new_leaves),
-                {"step": step + 1, "buckets": new_buckets})
+        out = {"step": step + 1, "buckets": new_buckets}
+        if quant:
+            out["codec_key"] = key
+        return jax.tree_util.tree_unflatten(treedef, new_leaves), out
 
     return Optimizer(init, update, engine=eng)
 
 
+def transcode(state, params, src: Optimizer, dst: Optimizer):
+    """Re-encode an optimizer state between codecs (``--resume`` across a
+    ``--state-codec`` change): decode every slot with ``src``'s codec,
+    re-encode with ``dst``'s.  Both optimizers must share the same rule
+    assignment (same model/optimizer config) — only the substrate differs.
+    Values are preserved up to the destination codec's quantization."""
+    eng_s, eng_d = src.engine, dst.engine
+    plan = eng_s.plan(params)
+    step = state["step"]
+    key = eng_d.codec_key()
+    new_buckets = {}
+    for b in plan.buckets:
+        st = state["buckets"][b.name]
+        if b.rule.slots is not None and not eng_s.codec.passthrough:
+            st = _decode_stacked(eng_s.codec, b.rule.slots, st)
+        if b.rule.slots is not None and not eng_d.codec.passthrough:
+            lids = jnp.asarray(b.indices, jnp.int32)
+            st = _encode_stacked(eng_d.codec, b.rule.slots, st, key, step,
+                                 lids)
+        new_buckets[b.name] = st
+    out = {"step": step, "buckets": new_buckets}
+    if key is not None:
+        out["codec_key"] = key
+    return out
+
+
 def state_bytes(optimizer: Optimizer, params) -> int:
     """Exact optimizer-state bytes via ``eval_shape`` — no analytic model,
-    correct for every host/rule combination (train.py's accounting)."""
+    correct for every host/rule combination (train.py's accounting).
+    Codec-aware for free: ``init`` builds the encoded layout (int8 ``q`` +
+    f32 scales), so the abstract tree already has the substrate's dtypes."""
     abstract = jax.eval_shape(optimizer.init, params)
     return sum(l.size * jnp.dtype(l.dtype).itemsize
                for l in jax.tree_util.tree_leaves(abstract))

@@ -31,6 +31,9 @@ class Host(NamedTuple):
     init: Callable[[jax.Array], Any]
     update: Callable[[jax.Array, Any, jax.Array], Tuple[jax.Array, Optional[jax.Array], jax.Array, Any]]
     name: str = "host"
+    # moment-slot mask mirroring the state structure (True = the state
+    # codec may store this array blocked-quantized); see optim/codec.py
+    slots: Any = None
 
 
 def _f32(x):
@@ -58,7 +61,7 @@ def adam(b1: float = 0.9, b2: float = 0.999, eps: float = 1e-6,
         new_state = {"m": m.astype(state_dtype), "v": v.astype(state_dtype)}
         return precond, 1.0 / denom, lr_mult, new_state
 
-    return Host(init, update, "adam")
+    return Host(init, update, "adam", slots={"m": True, "v": True})
 
 
 # ---------------------------------------------------------------------------
@@ -90,7 +93,7 @@ def adam_mini(b1: float = 0.9, b2: float = 0.999, eps: float = 1e-6,
         new_state = {"m": m.astype(state_dtype), "v": v.astype(state_dtype)}
         return precond, 1.0 / denom, lr_mult, new_state
 
-    return Host(init, update, "adam_mini")
+    return Host(init, update, "adam_mini", slots={"m": True, "v": True})
 
 
 # ---------------------------------------------------------------------------
@@ -137,7 +140,7 @@ def muon(beta: float = 0.95, ns_steps: int = 5, nesterov: bool = True,
         o = o * jnp.sqrt(jnp.maximum(1.0, rows / cols))
         return o, None, jnp.asarray(1.0, jnp.float32), {"m": m.astype(state_dtype)}
 
-    return Host(init, update, "muon")
+    return Host(init, update, "muon", slots={"m": True})
 
 
 HOSTS = {"adam": adam, "adam_mini": adam_mini, "muon": muon}

@@ -70,7 +70,7 @@ def _make_lowrank(name: str,
                   eligible, use_limiter_flag, gamma,
                   seed: int, state_dtype,
                   b1=0.9, b2=0.999, eps=1e-6,
-                  bucketed: bool = True) -> Optimizer:
+                  bucketed: bool = True, state_codec="f32") -> Optimizer:
     lr = _norm_lr(lr)
     host = hosts_lib.adam(b1, b2, eps, state_dtype)
     elig = eligible or default_eligible
@@ -86,7 +86,7 @@ def _make_lowrank(name: str,
 
     plain_rule = engine.LeafRule(
         kind="plain", init=lambda p: {"host": host.init(p)},
-        update=plain_update)
+        update=plain_update, slots={"host": host.slots})
 
     # -- low-rank rule ------------------------------------------------------
     def lowrank_init(p):
@@ -145,37 +145,47 @@ def _make_lowrank(name: str,
         q = p.astype(jnp.float32) - (lr_t * lr_mult * alpha) * delta.astype(jnp.float32)
         return q.astype(p.dtype), out
 
+    # projector + limiter memory stay exact (the projector is the subspace
+    # itself; re-quantizing it would rotate the moments' basis) — only the
+    # host moments in the rank-r subspace go through the codec.
+    lowrank_slots = {"host": host.slots, "proj": False}
+    if name in ("fira", "apollo"):
+        lowrank_slots["prev_norm"] = False
     lowrank_rule = engine.LeafRule(kind=name, init=lowrank_init,
-                                   update=lowrank_update)
+                                   update=lowrank_update,
+                                   slots=lowrank_slots)
 
     return engine.build(
         lambda path, leaf: (lowrank_rule if leaf_is_lowrank(path, leaf)
                             else plain_rule),
-        bucketed=bucketed)
+        bucketed=bucketed, codec=state_codec)
 
 
 def galore(lr, rank: Optional[int] = None, rank_frac: float = 0.25,
            alpha: float = 0.25, update_gap: int = 200,
            eligible: Callable = None, state_dtype=jnp.float32,
-           bucketed: bool = True) -> Optimizer:
+           bucketed: bool = True, state_codec="f32") -> Optimizer:
     return _make_lowrank("galore", lr, rank, rank_frac, alpha, update_gap,
                          eligible, False, limiter.DEFAULT_GAMMA, 0,
-                         state_dtype, bucketed=bucketed)
+                         state_dtype, bucketed=bucketed,
+                         state_codec=state_codec)
 
 
 def apollo(lr, rank: Optional[int] = None, rank_frac: float = 0.25,
            alpha: float = 1.0, update_gap: int = 200, seed: int = 0,
            eligible: Callable = None, state_dtype=jnp.float32,
-           bucketed: bool = True) -> Optimizer:
+           bucketed: bool = True, state_codec="f32") -> Optimizer:
     return _make_lowrank("apollo", lr, rank, rank_frac, alpha, update_gap,
                          eligible, True, limiter.DEFAULT_GAMMA, seed,
-                         state_dtype, bucketed=bucketed)
+                         state_dtype, bucketed=bucketed,
+                         state_codec=state_codec)
 
 
 def fira(lr, rank: Optional[int] = None, rank_frac: float = 0.25,
          alpha: float = 0.25, update_gap: int = 200,
          eligible: Callable = None, state_dtype=jnp.float32,
-         bucketed: bool = True) -> Optimizer:
+         bucketed: bool = True, state_codec="f32") -> Optimizer:
     return _make_lowrank("fira", lr, rank, rank_frac, alpha, update_gap,
                          eligible, True, limiter.DEFAULT_GAMMA, 0,
-                         state_dtype, bucketed=bucketed)
+                         state_dtype, bucketed=bucketed,
+                         state_codec=state_codec)

@@ -36,29 +36,34 @@ def host_rule(kind: str, host: hosts_lib.Host, lr: Schedule,
             q = q - lr_t * weight_decay * p.astype(jnp.float32)
         return q.astype(p.dtype), state
 
-    return engine.LeafRule(kind=kind, init=host.init, update=update)
+    return engine.LeafRule(kind=kind, init=host.init, update=update,
+                           slots=host.slots)
 
 
 def from_host(lr: Schedule | float, host: hosts_lib.Host,
-              weight_decay: float = 0.0, bucketed: bool = True) -> Optimizer:
+              weight_decay: float = 0.0, bucketed: bool = True,
+              state_codec="f32") -> Optimizer:
     rule = host_rule(host.name, host, _norm_lr(lr), weight_decay)
-    return engine.build(lambda path, leaf: rule, bucketed=bucketed)
+    return engine.build(lambda path, leaf: rule, bucketed=bucketed,
+                        codec=state_codec)
 
 
 def adam(lr, b1=0.9, b2=0.999, eps=1e-6, weight_decay=0.0,
-         state_dtype=jnp.float32, bucketed: bool = True) -> Optimizer:
+         state_dtype=jnp.float32, bucketed: bool = True,
+         state_codec="f32") -> Optimizer:
     return from_host(lr, hosts_lib.adam(b1, b2, eps, state_dtype),
-                     weight_decay, bucketed)
+                     weight_decay, bucketed, state_codec)
 
 
 def adam_mini(lr, b1=0.9, b2=0.999, eps=1e-6, weight_decay=0.0,
-              state_dtype=jnp.float32, bucketed: bool = True) -> Optimizer:
+              state_dtype=jnp.float32, bucketed: bool = True,
+              state_codec="f32") -> Optimizer:
     return from_host(lr, hosts_lib.adam_mini(b1, b2, eps, state_dtype),
-                     weight_decay, bucketed)
+                     weight_decay, bucketed, state_codec)
 
 
 def sgd(lr, momentum: float = 0.9, state_dtype=jnp.float32,
-        bucketed: bool = True) -> Optimizer:
+        bucketed: bool = True, state_codec="f32") -> Optimizer:
     lr = _norm_lr(lr)
 
     def update(g, p, m, step, leaf_id):
@@ -69,12 +74,14 @@ def sgd(lr, momentum: float = 0.9, state_dtype=jnp.float32,
 
     rule = engine.LeafRule(
         kind="sgd", init=lambda p: jnp.zeros(p.shape, state_dtype),
-        update=update)
-    return engine.build(lambda path, leaf: rule, bucketed=bucketed)
+        update=update, slots=True)
+    return engine.build(lambda path, leaf: rule, bucketed=bucketed,
+                        codec=state_codec)
 
 
 def muon(lr, beta=0.95, ns_steps=5, adam_lr: Optional[float] = None,
-         state_dtype=jnp.float32, bucketed: bool = True) -> Optimizer:
+         state_dtype=jnp.float32, bucketed: bool = True,
+         state_codec="f32") -> Optimizer:
     """MUON on ≥2-D matmul weights, Adam on the rest — embeddings/heads/
     norms excluded per standard MUON practice (orthogonalizing the
     embedding matrix diverges)."""
@@ -92,4 +99,4 @@ def muon(lr, beta=0.95, ns_steps=5, adam_lr: Optional[float] = None,
 
     return engine.build(
         lambda path, leaf: muon_r if is_muon(path, leaf) else adam_r,
-        bucketed=bucketed)
+        bucketed=bucketed, codec=state_codec)

@@ -297,6 +297,35 @@ def test_sigterm_preempt_then_resume_is_bitwise(tmp_path, seed):
         assert la[name] == lb[name], f"leaf {name} differs after resume"
 
 
+def test_sigterm_resume_int8_codec_is_bitwise(tmp_path):
+    """SIGTERM + --resume under --state-codec int8 must reproduce the
+    uninterrupted int8 run byte-for-byte — q codes, block scales, and
+    params included.  The stochastic-rounding stream is a pure function
+    of (codec_key, step, slot, leaf): the key lives in the checkpointed
+    opt_state, so the resumed run redraws the exact same rounding bits."""
+    extra = ("--state-codec", "int8")
+    a, b = tmp_path / "interrupted", tmp_path / "straight"
+    _interrupt_then_resume(a, extra=extra, steps=48)
+    _launch(b, extra=extra, steps=48)
+
+    la, lb = _final_leaves(a, step=48), _final_leaves(b, step=48)
+    assert la.keys() == lb.keys()
+    for name in la:
+        assert la[name] == lb[name], f"leaf {name} differs after resume"
+
+
+def test_resume_transcodes_codec_change(tmp_path):
+    """A --resume whose --state-codec differs from the checkpoint's
+    transcodes the optimizer state in place (f32 checkpoint → int8 run)
+    instead of failing the structure check, and trains on."""
+    a = tmp_path / "ck"
+    _launch(a, steps=16)
+    log = _launch(a, extra=("--state-codec", "int8", "--resume"), steps=32)
+    assert "transcoded optimizer state f32 -> int8" in log, log
+    assert "resumed from step 16" in log, log
+    _final_leaves(a, step=32)  # committed and loadable
+
+
 def test_sigterm_resume_corpus_worker_count_bitwise(tmp_path):
     """The corpus source through the launcher: SIGTERM mid-run with
     PROCESS workers, then --resume with the plain prefetch thread (a
