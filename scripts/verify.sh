@@ -57,6 +57,12 @@ echo "== corpus (fails if any optimizer stops learning, or if the =="
 echo "== quantized gwt2_int8 cell stops tracking the gwt2 f32 curve) =="
 python -m benchmarks.run --only curve --quick
 
+echo "== serving runtime: continuous batching vs static waves on the =="
+echo "== fixture-corpus model (fails unless continuous >= 1.3x static =="
+echo "== tokens/sec on the mixed-length workload, or if int8 KV greedy =="
+echo "== agreement with f32 drops below 95%) =="
+python -m benchmarks.run --only serve --quick
+
 if [[ "${1:-}" == "--quick" ]]; then
     exit 0
 fi

@@ -280,9 +280,20 @@ def _local_block_attn(q, k, v, *, window: int, cap: float):
 def attn_apply(p, cfg, x, cos, sin, *, local: bool = False,
                mode: str = "train", cache: Optional[dict] = None,
                pos: Optional[jax.Array] = None,
-               bidirectional: bool = False) -> Tuple[jax.Array, Optional[dict]]:
+               bidirectional: bool = False,
+               page_table: Optional[jax.Array] = None
+               ) -> Tuple[jax.Array, Optional[dict]]:
     """Returns (output, new_cache).  ``pos``: scalar cache fill level
-    (decode).  ``mode``: train | prefill | decode."""
+    (decode).  ``mode``: train | prefill | decode | chunk_prefill.
+
+    ``page_table`` switches the cached modes to the slot-paged serving
+    layout (repro.serve.kv): ``cache`` holds shared page pools, ``pos``
+    is a per-slot fill-level VECTOR, and every read masks ``kv_valid``
+    against the slot's own length — the step the continuous-batching
+    engine drives (DESIGN.md §9).  ``chunk_prefill`` processes one slot's
+    (1, C) prompt chunk at global positions ``pos[0] .. pos[0]+C-1``
+    against everything already paged in.
+    """
     B, S, _ = x.shape
     H = cfg.n_heads
     window = cfg.window if local else 0
@@ -291,8 +302,41 @@ def attn_apply(p, cfg, x, cos, sin, *, local: bool = False,
     q = rope_lib.apply_rope(q, cos, sin)
     k = rope_lib.apply_rope(k, cos, sin)
 
+    if page_table is not None and local and window:
+        raise NotImplementedError(
+            "paged serving covers full-attention blocks only; the "
+            "sliding-window ring-buffer layout has no page-table form yet")
+
     new_cache = None
-    if mode == "decode":
+    if mode == "decode" and page_table is not None:
+        # Slot-paged decode: scatter each slot's new entry to its page,
+        # gather its pages to a contiguous view, mask by its own length.
+        from repro.serve import kv as kv_lib
+        assert cache is not None and S == 1
+        P = kv_lib.page_size(cache["k"])
+        page, off = kv_lib.token_dest(page_table, pos, P)
+        new_cache = {"k": kv_lib.write(cache["k"], page, off, k[:, 0]),
+                     "v": kv_lib.write(cache["v"], page, off, v[:, 0])}
+        ck = kv_lib.gather(new_cache["k"], page_table, q.dtype)
+        cv = kv_lib.gather(new_cache["v"], page_table, q.dtype)
+        valid = jnp.arange(ck.shape[1])[None, :] <= pos[:, None]
+        o = _decode_attn_grouped(q, ck, cv, valid, cap)
+    elif mode == "chunk_prefill":
+        from repro.serve import kv as kv_lib
+        assert cache is not None and page_table is not None and B == 1, \
+            "chunk_prefill is the paged engine's one-slot prompt step"
+        P = kv_lib.page_size(cache["k"])
+        page, off = kv_lib.chunk_dest(page_table[0], pos[0], S, P)
+        new_cache = {"k": kv_lib.write(cache["k"], page, off, k[0]),
+                     "v": kv_lib.write(cache["v"], page, off, v[0])}
+        ck = kv_lib.gather(new_cache["k"], page_table, q.dtype)
+        cv = kv_lib.gather(new_cache["v"], page_table, q.dtype)
+        # entries past this chunk's last write are other slots' trash
+        valid = jnp.arange(ck.shape[1])[None, :] <= pos[:, None] + (S - 1)
+        o = _direct_attn(q, _repeat_kv(ck, H), _repeat_kv(cv, H),
+                         causal_offset=pos[0], window=0, cap=cap,
+                         kv_valid=valid)
+    elif mode == "decode":
         assert cache is not None and S == 1
         size = cache["k"].shape[1]
         slot = pos % size if (local and window) else pos

@@ -45,14 +45,21 @@ def block_init(b: Builder, cfg, kind: str) -> dict:
 
 def block_apply(p, cfg, kind: str, x, cos, sin, *, mode: str = "train",
                 cache: Optional[dict] = None, pos=None,
-                bidirectional: bool = False):
-    """Returns (x, new_mixer_cache, aux_loss)."""
+                bidirectional: bool = False, page_table=None):
+    """Returns (x, new_mixer_cache, aux_loss).  ``page_table`` selects the
+    slot-paged serving cache layout (attention blocks only)."""
     base, use_moe = parse_kind(kind)
+    if page_table is not None and base not in ("attn", "attn_local"):
+        raise NotImplementedError(
+            f"paged serving caches exist only for attention blocks, not "
+            f"{base!r} (recurrent mixers keep O(1) state per slot and need "
+            "no paging)")
     h = rms_norm(x, p["norm1"], cfg.norm_eps)
     if base in ("attn", "attn_local"):
         h, nc = attention.attn_apply(
             p["mixer"], cfg, h, cos, sin, local=(base == "attn_local"),
-            mode=mode, cache=cache, pos=pos, bidirectional=bidirectional)
+            mode=mode, cache=cache, pos=pos, bidirectional=bidirectional,
+            page_table=page_table)
     elif base == "mamba":
         h, nc = ssm.mamba_apply(p["mixer"], cfg, h, mode=mode, cache=cache)
     elif base == "mlstm":
@@ -86,3 +93,25 @@ def block_cache(mk, cfg, kind: str, B: int, max_len: int) -> Optional[dict]:
     if base == "slstm":
         return xlstm.slstm_cache(mk, cfg, B)
     return None
+
+
+def block_paged_cache(mk, cfg, kind: str, num_pages: int, page_size: int,
+                      quant: Optional[str] = None) -> Optional[dict]:
+    """Shared serving arena for one block: a page pool per K and V
+    (repro.serve.kv layout), or ``None`` for cacheless blocks.  Only
+    full-attention blocks are supported (the engine validates upstream)."""
+    base, _ = parse_kind(kind)
+    if base not in ("attn", "attn_local"):
+        raise NotImplementedError(
+            f"no paged cache layout for block kind {base!r}")
+    KV, hd = cfg.n_kv_heads, cfg.head_dim
+    axes = ("pages", "page", "kv_heads", None)
+    if quant == "int8":
+        pool = lambda: {
+            "q": mk((num_pages, page_size, KV, hd), axes, jnp.int8),
+            "scale": mk((num_pages, page_size, KV), axes[:3], jnp.float32)}
+    elif quant is None:
+        pool = lambda: mk((num_pages, page_size, KV, hd), axes, None)
+    else:
+        raise ValueError(f"kv quant {quant!r}: expected None or 'int8'")
+    return {"k": pool(), "v": pool()}

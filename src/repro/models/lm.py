@@ -150,6 +150,50 @@ def cache_axes(cfg, B: int = 1, max_len: int = 2):
     return _build_cache(cfg, "axes", B, max_len)
 
 
+def _build_paged_caches(cfg, mode: str, num_pages: int, page_size: int,
+                        quant: Optional[str]):
+    mk = _cache_maker(mode, jnp.dtype(cfg.dtype))
+
+    def period_cache():
+        return {f"b{i}": blocks.block_paged_cache(mk, cfg, kind, num_pages,
+                                                  page_size, quant)
+                for i, kind in enumerate(cfg.pattern)}
+
+    cache: Dict[str, Any] = {}
+    if cfg.n_periods > 0:
+        one = period_cache()
+        if mode == "abstract":
+            cache["layers"] = jax.tree.map(
+                lambda s: jax.ShapeDtypeStruct((cfg.n_periods,) + s.shape,
+                                               s.dtype), one)
+        else:
+            cache["layers"] = jax.tree.map(
+                lambda x: jnp.broadcast_to(
+                    x, (cfg.n_periods,) + x.shape).copy(), one)
+    if cfg.rem_layers:
+        cache["rem"] = {f"b{i}": blocks.block_paged_cache(
+            mk, cfg, cfg.pattern[i], num_pages, page_size, quant)
+            for i in range(cfg.rem_layers)}
+    return cache
+
+
+def init_paged_caches(cfg, num_pages: int, page_size: int,
+                      kv_quant: Optional[str] = None):
+    """Shared serving arenas: one ``(num_pages, page_size, KV, hd)`` pool
+    per K and V per block, stacked over scan periods exactly like the
+    dense decode caches so the scan-carry path is reused unchanged.
+    ``kv_quant='int8'`` swaps each pool for ``{"q": int8, "scale": f32}``
+    (repro.serve.kv encodings).  No ``pos``/``page_table`` entries — the
+    engine owns those and passes them per call."""
+    return _build_paged_caches(cfg, "init", num_pages, page_size, kv_quant)
+
+
+def abstract_paged_caches(cfg, num_pages: int, page_size: int,
+                          kv_quant: Optional[str] = None):
+    return _build_paged_caches(cfg, "abstract", num_pages, page_size,
+                               kv_quant)
+
+
 # ---------------------------------------------------------------------------
 # Forward
 # ---------------------------------------------------------------------------
@@ -159,7 +203,17 @@ def forward(cfg, params, tokens: jax.Array, *, mode: str = "train",
             ) -> Tuple[jax.Array, Optional[dict], jax.Array]:
     """Returns (logits, new_caches, aux_loss).  ``ctx`` pins the mesh and
     kernel backend explicitly; ``None`` adopts the ambient mesh (CPU unit
-    tests)."""
+    tests).
+
+    Serving (paged) variant: when ``caches`` carries a ``"page_table"``
+    entry, ``caches["layers"]`` holds shared page pools (repro.serve.kv),
+    ``caches["pos"]`` is a per-slot length VECTOR, and two extra modes
+    apply — ``decode`` scatters one token per slot into its pages, and
+    ``chunk_prefill`` pages in one slot's (1, C) prompt chunk at global
+    positions ``pos[0]..pos[0]+C-1`` and returns the FULL chunk logits
+    (the engine needs the prompt-final position, which may land mid-chunk
+    when the last chunk is padded).
+    """
     if ctx is None:
         ctx = MeshContext.ambient()
     B, S = tokens.shape
@@ -170,8 +224,16 @@ def forward(cfg, params, tokens: jax.Array, *, mode: str = "train",
     x = constrain_batch(embed_apply(params["embed"], tokens, cfg.d_model),
                         seq=seq_par, ctx=ctx)
     pos = caches["pos"] if caches is not None else None
+    page_table = caches.get("page_table") if caches is not None else None
 
-    if mode == "decode":
+    if page_table is not None:
+        if mode not in ("decode", "chunk_prefill"):
+            raise ValueError(f"paged caches serve decode/chunk_prefill "
+                             f"only, got mode={mode!r}")
+        # per-slot positions: each slot rotates at its OWN fill level
+        positions = pos[:, None] + (jnp.arange(S)[None, :]
+                                    if mode == "chunk_prefill" else 0)
+    elif mode == "decode":
         positions = jnp.broadcast_to(pos, (B, S))
     else:
         positions = jnp.broadcast_to(jnp.arange(S), (B, S))
@@ -194,7 +256,8 @@ def forward(cfg, params, tokens: jax.Array, *, mode: str = "train",
 
             def one_block(bp, xx, cc, kind=kind):
                 return blocks.block_apply(bp, cfg, kind, xx, cos, sin,
-                                          mode=mode, cache=cc, pos=pos)
+                                          mode=mode, cache=cc, pos=pos,
+                                          page_table=page_table)
             if cfg.remat and mode == "train" and len(pattern) > 1:
                 # layer-level nested remat: the period-level backward
                 # otherwise keeps ALL blocks' recomputed intermediates live
@@ -206,7 +269,8 @@ def forward(cfg, params, tokens: jax.Array, *, mode: str = "train",
             aux_sum = aux_sum + aux
         return x, new_pc, aux_sum
 
-    if cfg.n_periods > 0 and mode == "decode" and caches is not None:
+    if cfg.n_periods > 0 and mode in ("decode", "chunk_prefill") \
+            and caches is not None:
         # Decode: the cache rides the scan CARRY (in-place donation-friendly
         # aliasing); as xs/ys the stacked cache cannot alias through the
         # while loop — measured +cache-size temp (16 GiB on deepseek
@@ -279,7 +343,10 @@ def forward(cfg, params, tokens: jax.Array, *, mode: str = "train",
     if cfg.final_softcap:
         logits = softcap(logits, cfg.final_softcap)
     if caches is not None:
-        new_caches["pos"] = pos + (1 if mode == "decode" else 0)
+        inc = 1 if mode == "decode" else (S if mode == "chunk_prefill" else 0)
+        new_caches["pos"] = pos + inc
+        if page_table is not None:
+            new_caches["page_table"] = page_table
         return logits, new_caches, aux_total
     if mode == "prefill":
         new_caches["pos"] = jnp.asarray(S, jnp.int32)
@@ -615,3 +682,37 @@ def make_decode_step(cfg, ctx: MeshContext = None):
             mrope_positions=batch.get("mrope_positions"), ctx=ctx)
         return logits[:, -1], new_caches
     return decode_step
+
+
+def make_paged_decode_step(cfg, ctx: MeshContext = None):
+    """One serving decode tick: ``tokens (num_slots, 1)`` — every slot,
+    every tick (fixed shape for jit; inactive slots carry trash-page
+    tables and get masked out by ``kv_valid``).  Returns
+    ``(last-position logits (num_slots, V), new_pools)`` — the pools are
+    the only mutated state, so the engine jits this with
+    ``donate_argnums=(1,)`` and rebinds."""
+    def step(params, pools, page_table, lens, tokens):
+        caches = dict(pools)
+        caches["pos"] = lens
+        caches["page_table"] = page_table
+        logits, new_caches, _ = forward(cfg, params, tokens, mode="decode",
+                                        caches=caches, ctx=ctx)
+        return logits[:, -1], {k: new_caches[k] for k in pools}
+    return step
+
+
+def make_chunk_prefill_step(cfg, ctx: MeshContext = None):
+    """Page in ONE slot's next prompt chunk: ``tokens (1, C)`` at global
+    positions ``filled[0]..filled[0]+C-1`` (``page_table`` is that slot's
+    single row, ``(1, max_pages)``).  Returns the full ``(1, C, V)`` chunk
+    logits plus the updated pools — same donation contract as the decode
+    step."""
+    def step(params, pools, page_table, filled, tokens):
+        caches = dict(pools)
+        caches["pos"] = filled
+        caches["page_table"] = page_table
+        logits, new_caches, _ = forward(cfg, params, tokens,
+                                        mode="chunk_prefill", caches=caches,
+                                        ctx=ctx)
+        return logits, {k: new_caches[k] for k in pools}
+    return step

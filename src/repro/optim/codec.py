@@ -87,13 +87,19 @@ def num_blocks(size: int, block: int = DEFAULT_BLOCK) -> int:
     return max(1, -(-size // block))
 
 
-def blocked_quant(x: jax.Array, salt, block: int = DEFAULT_BLOCK):
+def blocked_quant(x: jax.Array, salt, block: int = DEFAULT_BLOCK,
+                  rounding: str = "stochastic"):
     """``x -> (q int8 (x.shape), scale f32 (nb,))``; row-major flat blocks.
 
     ``scale = absmax/127`` per block; elements are divided by their block's
     scale and stochastically rounded (``floor(y) + (u < frac(y))`` with
     ``u = uniform01(salt, flat_idx)``) — unbiased, error ≤ one quantum
     (= scale).  All-zero blocks encode as ``scale = 0`` exactly.
+
+    ``rounding="nearest"`` rounds to the nearest level instead (``salt``
+    is ignored): half the worst-case error, but biased under repeated
+    requantization — right for write-once payloads (the serving KV cache,
+    which encodes each entry exactly once), wrong for optimizer moments.
     """
     shape = tuple(x.shape)
     n = int(x.size)
@@ -106,9 +112,15 @@ def blocked_quant(x: jax.Array, salt, block: int = DEFAULT_BLOCK):
     scale = absmax * jnp.float32(1.0 / 127.0)
     inv = jnp.where(scale > 0, 1.0 / scale, 0.0).astype(jnp.float32)
     y = blocks * inv[:, None]
-    idx = jax.lax.iota(jnp.uint32, nb * block).reshape(nb, block)
-    lo = jnp.floor(y)
-    q = lo + (uniform01(salt, idx) < (y - lo)).astype(jnp.float32)
+    if rounding == "nearest":
+        q = jnp.round(y)
+    elif rounding == "stochastic":
+        idx = jax.lax.iota(jnp.uint32, nb * block).reshape(nb, block)
+        lo = jnp.floor(y)
+        q = lo + (uniform01(salt, idx) < (y - lo)).astype(jnp.float32)
+    else:
+        raise ValueError(f"rounding {rounding!r}: expected 'stochastic' "
+                         "or 'nearest'")
     q = jnp.clip(q, -127.0, 127.0).astype(jnp.int8)
     return q.reshape(-1)[:n].reshape(shape), scale
 

@@ -1,0 +1,22 @@
+"""Serving runtime: continuous (in-flight) batching over a slot-paged,
+optionally int8-quantized KV cache (DESIGN.md §9).
+
+``repro.serve.kv`` holds the paged-pool substrate (imported by the model
+attention layer for its paged decode path); ``repro.serve.engine`` holds
+the scheduler.  The engine import is lazy so ``models → serve.kv`` never
+cycles back through ``engine → models``.
+"""
+
+__all__ = ["kv", "Engine", "Request", "EngineConfig"]
+
+import importlib
+
+
+def __getattr__(name):
+    # importlib.import_module, not ``from repro.serve import x``: the
+    # from-import re-enters this __getattr__ and recurses.
+    if name in ("Engine", "Request", "EngineConfig"):
+        return getattr(importlib.import_module("repro.serve.engine"), name)
+    if name == "kv":
+        return importlib.import_module("repro.serve.kv")
+    raise AttributeError(f"module 'repro.serve' has no attribute {name!r}")

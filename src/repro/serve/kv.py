@@ -1,0 +1,118 @@
+"""Slot-paged KV-cache pools (DESIGN.md §9).
+
+A serving KV cache is ONE preallocated arena per attention layer — a pool
+of ``num_pages`` page-granular blocks of ``page_size`` token entries —
+shared by every in-flight request.  Each request (slot) owns a set of
+pages named by its *page table* row; logical cache position ``t`` of a
+slot lives at ``(page_table[slot, t // page_size], t % page_size)``.
+Nothing is ever resized or compacted: admitting a request is a free-list
+pop, retiring one is a push, and requests of wildly different lengths
+never pad each other.
+
+Two pool encodings, chosen at engine construction:
+
+* ``None`` (default) — a plain ``(num_pages, page_size, KV, hd)`` array
+  in the model compute dtype.
+* ``"int8"`` — ``{"q": int8 (num_pages, page_size, KV, hd),
+  "scale": f32 (num_pages, page_size, KV)}``: each written entry's
+  per-head vector is quantized against its own absmax through
+  :func:`repro.optim.codec.blocked_quant` with ``block=head_dim`` and
+  round-to-nearest (entries are encoded exactly once, so the stochastic
+  stream the optimizer substrate needs would only add noise here).
+  ~4× less persistent KV memory per token.
+
+Page 0 is reserved as the TRASH page: free slots' page-table rows point
+at it, so the fixed-shape decode step can scatter a token for *every*
+slot each tick — inactive slots land in trash (never read: their
+``kv_valid`` mask covers nothing real) instead of needing a ragged
+dispatch.  Reads gather a slot's pages into a transient contiguous
+``(B, max_pages·page_size, KV, hd)`` view; on CPU/XLA this is a copy the
+attention einsum consumes immediately, while the *persistent* footprint
+stays the shared arena.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim import codec
+
+TRASH_PAGE = 0
+
+
+def is_quantized(pool) -> bool:
+    return isinstance(pool, dict)
+
+
+def page_size(pool) -> int:
+    return (pool["q"] if is_quantized(pool) else pool).shape[1]
+
+
+def capacity(pool, page_table: jax.Array) -> int:
+    """Tokens addressable through one page-table row: max_pages · page."""
+    return int(page_table.shape[-1]) * page_size(pool)
+
+
+def quant_entries(x: jax.Array):
+    """``(..., KV, hd) -> (q int8 same shape, scale f32 (..., KV))``: one
+    absmax block per written head vector, via the codec's blocked
+    primitive (``block = head_dim``, round-to-nearest)."""
+    q, scale = codec.blocked_quant(x, jnp.uint32(0), block=int(x.shape[-1]),
+                                   rounding="nearest")
+    return q, scale.reshape(x.shape[:-1])
+
+
+def write(pool, page: jax.Array, off: jax.Array, val: jax.Array):
+    """Scatter token entries into the pool.
+
+    ``val`` is ``(N, KV, hd)`` new K or V entries; ``page``/``off`` are
+    ``(N,)`` destinations.  Distinct live destinations by construction
+    (each slot owns its pages); duplicate destinations only occur on the
+    trash page, where any write order is fine.
+    """
+    if is_quantized(pool):
+        q, scale = quant_entries(val)
+        return {"q": pool["q"].at[page, off].set(q),
+                "scale": pool["scale"].at[page, off].set(scale)}
+    return pool.at[page, off].set(val.astype(pool.dtype))
+
+
+def gather(pool, page_table: jax.Array, dtype) -> jax.Array:
+    """Materialize page-table rows as a contiguous transient cache view:
+    ``(B, max_pages) -> (B, max_pages·page_size, KV, hd)`` in ``dtype``
+    (int8 pools dequantize on the way out)."""
+    if is_quantized(pool):
+        q = pool["q"][page_table]                 # (B, MP, P, KV, hd)
+        s = pool["scale"][page_table]             # (B, MP, P, KV)
+        x = (q.astype(jnp.float32) * s[..., None]).astype(dtype)
+    else:
+        x = pool[page_table].astype(dtype)
+    B, MP, P = x.shape[0], x.shape[1], x.shape[2]
+    return x.reshape(B, MP * P, *x.shape[3:])
+
+
+def token_dest(page_table: jax.Array, pos: jax.Array, page: int
+               ) -> Tuple[jax.Array, jax.Array]:
+    """Per-slot decode destination: slot ``b``'s next entry goes to
+    ``(page_table[b, pos[b] // page], pos[b] % page)``."""
+    B = page_table.shape[0]
+    pg = page_table[jnp.arange(B), pos // page]
+    return pg, pos % page
+
+
+def chunk_dest(pt_row: jax.Array, start: jax.Array, n: int, page: int
+               ) -> Tuple[jax.Array, jax.Array]:
+    """Prefill-chunk destinations: positions ``start .. start+n-1`` of the
+    single slot whose page-table row is ``pt_row`` ``(max_pages,)``."""
+    positions = start + jnp.arange(n)
+    return pt_row[positions // page], positions % page
+
+
+def pool_bytes(pools) -> int:
+    """Persistent arena bytes of a paged-cache tree (the number the int8
+    option shrinks ~4×)."""
+    return sum(l.size * jnp.dtype(l.dtype).itemsize
+               for l in jax.tree_util.tree_leaves(pools))
