@@ -849,6 +849,14 @@ CURVE_TRACK_GATE = 1.25  # gwt2_int8 final loss must stay under this
 # rounding stream stalls near the ~126-nat initial loss, far past any
 # plausible noise band.
 
+LORA_TRACK_GATE = 1.25   # gwt2-LoRA final loss vs adam-LoRA final loss.
+# The fine-tune cells start from the adam cell's trained base, so the
+# learn gate (a from-scratch tripwire) does not apply; what matters is
+# that compressing the ADAPTER moments into wavelet subspaces tracks the
+# uncompressed adapter run — same tolerance philosophy as int8 tracking.
+
+LORA_RANK, LORA_ALPHA = 8, 16.0
+
 
 def curve_bench(quick: bool):
     import json
@@ -879,6 +887,7 @@ def curve_bench(quick: bool):
                ("adam", "adam", {}),
                ("galore_1_4", "galore", dict(rank_frac=0.25,
                                              update_gap=steps))]
+    base_params = None  # the adam cell's trained weights seed the LoRA cells
     for tag, name, kw in methods:
         opt = optim.make(name, lr=warmup_cosine(0.01, steps), **kw)
         params = lm.init(cfg, jax.random.key(0))
@@ -890,8 +899,10 @@ def curve_bench(quick: bool):
                          log_every=eval_every, max_chunk=8, log=silent,
                          evaluator=ev, eval_every=eval_every)
         t0 = time.perf_counter()
-        _, _, losses = loop.run(params, st, num_steps=steps)
+        trained, _, losses = loop.run(params, st, num_steps=steps)
         dt = time.perf_counter() - t0
+        if tag == "adam":
+            base_params = trained
         k = max(steps // 10, 1)
         cell = {"initial_loss": round(losses[0], 4),
                 "final_loss": round(sum(losses[-k:]) / k, 4),
@@ -924,6 +935,97 @@ def curve_bench(quick: bool):
         emit("curve/int8_tracking_gate", 0.0,
              f"gwt2_int8 final {q8_final} vs f32 {f32_final} "
              f"(ratio {q8_final / f32_final:.3f} <= {CURVE_TRACK_GATE}, ok)")
+
+    # ---- fine-tune cells: LoRA on the adam cell's trained base ----------
+    # The paper claims GWT works for fine-tuning too: here the FROZEN base
+    # carries zero optimizer state and only the adapters' Adam moments go
+    # through the engine — "gwt2_lora" compresses those into wavelet
+    # subspaces, "adam_lora" keeps them raw.  Same steps budget, fresh
+    # data-order seed (a stand-in for a downstream corpus).
+    from repro.models import lora
+    ft_src = CorpusLM(corpus, S, B, seed=1)
+    for tag, name, kw in [("gwt2_lora", "gwt", dict(level=2)),
+                          ("adam_lora", "adam", {})]:
+        inner = optim.make(name, lr=warmup_cosine(0.01, steps), **kw)
+        opt = lora.wrap_optimizer(inner)
+        # fresh buffers per cell: TrainLoop donates its input tree, which
+        # would delete the shared base arrays for the next cell
+        tree = lora.inject(jax.tree.map(jnp.copy, base_params), LORA_RANK,
+                           jax.random.fold_in(jax.random.key(0), 777))
+        st = opt.init(tree)
+        ev = make_lm_evaluator(cfg, lora.loss_module(lm, LORA_ALPHA,
+                                                     LORA_RANK),
+                               CorpusLM(corpus, S, B, seed=0, split="eval"),
+                               n_batches=4)
+        loop = TrainLoop(
+            lora.make_train_step(lm, cfg, opt, rank=LORA_RANK,
+                                 alpha=LORA_ALPHA),
+            None, ft_src, log_every=eval_every, max_chunk=8, log=silent,
+            evaluator=ev, eval_every=eval_every)
+        t0 = time.perf_counter()
+        _, _, losses = loop.run(tree, st, num_steps=steps)
+        dt = time.perf_counter() - t0
+        k = max(steps // 10, 1)
+        cell = {"initial_loss": round(losses[0], 4),
+                "final_loss": round(sum(losses[-k:]) / k, 4),
+                "auc_loss": round(sum(losses) / len(losses), 4),
+                "eval_curve": [(s, round(v, 4)) for s, v in ev.history],
+                "final_eval_loss": round(ev.history[-1][1], 4),
+                "steps_per_sec": round(steps / dt, 2),
+                "lora_rank": LORA_RANK, "lora_alpha": LORA_ALPHA}
+        out["cells"][tag] = cell
+        emit(f"curve/{tag}", dt / steps * 1e6,
+             f"final={cell['final_loss']} auc={cell['auc_loss']} "
+             f"eval={cell['final_eval_loss']}")
+    lf32, lgwt = (out["cells"]["adam_lora"]["final_loss"],
+                  out["cells"]["gwt2_lora"]["final_loss"])
+    out["lora_tracking"] = {"final_loss_ratio": round(lgwt / lf32, 4),
+                            "bound": LORA_TRACK_GATE}
+    if lgwt > LORA_TRACK_GATE * lf32:
+        emit("curve/lora_tracking_ERROR", 0.0,
+             f"gwt2_lora final loss {lgwt} > {LORA_TRACK_GATE} * "
+             f"adam_lora final {lf32}")
+    else:
+        emit("curve/lora_tracking_gate", 0.0,
+             f"gwt2_lora final {lgwt} vs adam_lora {lf32} "
+             f"(ratio {lgwt / lf32:.3f} <= {LORA_TRACK_GATE}, ok)")
+
+    # ---- substrate cells: the non-llama architectures through the same
+    # TrainLoop + gwt2 path, no per-arch call-site patches (the encdec
+    # frame stub is a pipeline adapter, exactly as in the launcher).
+    # Gate: the losses must stay finite — a routing/leaf-plan regression
+    # on any substrate shows up as NaN/divergence within a few steps.
+    import math as _math
+    from repro.data.pipeline import WithEncoderFrames
+    from repro.models import encdec as encdec_mod
+    sub_steps = 6 if quick else 12
+    for tag, arch in [("moe", "qwen2-moe-a2.7b"), ("ssm", "jamba-v0.1-52b"),
+                      ("xlstm", "xlstm-350m"),
+                      ("encdec", "seamless-m4t-large-v2")]:
+        scfg = configs.get_smoke(arch)
+        mod = encdec_mod if scfg.arch_class == "encdec" else lm
+        src = CorpusLM(corpus, S, 4, seed=0)
+        if scfg.arch_class == "encdec":
+            src = WithEncoderFrames(src, S // 4, scfg.d_model)
+        opt = optim.make("gwt", lr=warmup_cosine(0.01, sub_steps), level=2)
+        sparams = mod.init(scfg, jax.random.key(0))
+        sst = opt.init(sparams)
+        loop = TrainLoop(mod.make_train_step(scfg, opt), None, src,
+                         log_every=sub_steps, max_chunk=4, log=silent)
+        t0 = time.perf_counter()
+        _, _, losses = loop.run(sparams, sst, num_steps=sub_steps)
+        dt = time.perf_counter() - t0
+        cell = {"arch": scfg.name,
+                "initial_loss": round(losses[0], 4),
+                "final_loss": round(losses[-1], 4),
+                "steps_per_sec": round(sub_steps / dt, 2)}
+        out["cells"][f"substrate_{tag}"] = cell
+        emit(f"curve/substrate_{tag}", dt / sub_steps * 1e6,
+             f"initial={cell['initial_loss']} final={cell['final_loss']}")
+        if not all(_math.isfinite(l) for l in losses):
+            emit(f"curve/substrate_{tag}_ERROR", 0.0,
+                 f"non-finite loss in {losses}")
+
     here = os.path.dirname(os.path.abspath(__file__))
     path = os.path.join(here, "BENCH_curve_cpu_quick.json" if quick
                         else "BENCH_curve_cpu.json")

@@ -52,9 +52,12 @@ echo "== (fails if process workers are slower than the prefetch thread =="
 echo "== on the tokenization-heavy source) =="
 python -m benchmarks.run --only data --quick
 
-echo "== loss-curve harness: gwt/gwt+int8/adam/galore on the fixture =="
-echo "== corpus (fails if any optimizer stops learning, or if the =="
-echo "== quantized gwt2_int8 cell stops tracking the gwt2 f32 curve) =="
+echo "== loss-curve harness: gwt/gwt+int8/adam/galore pre-training, =="
+echo "== gwt2-LoRA vs adam-LoRA fine-tuning, and the moe/ssm/xlstm/ =="
+echo "== encdec substrate smokes, all on the fixture corpus (fails if =="
+echo "== any optimizer stops learning, the quantized or LoRA gwt cells =="
+echo "== stop tracking their f32/adam references, or any substrate =="
+echo "== goes non-finite) =="
 python -m benchmarks.run --only curve --quick
 
 echo "== serving runtime: continuous batching vs static waves on the =="
@@ -67,5 +70,15 @@ if [[ "${1:-}" == "--quick" ]]; then
     exit 0
 fi
 
+if [[ "${REPRO_FULL_MATRIX:-0}" == "1" ]]; then
+    echo "== full scenario matrix (nightly tier: substrate x family x =="
+    echo "== codec cross-product + launcher SIGTERM sweep, --runslow) =="
+    python -m pytest tests/test_scenario_matrix.py -q --runslow
+fi
+
 echo "== tier-1 test suite =="
+# Wall-clock budget: tier-1 must stay in its current envelope (~15 min on
+# the 1-core CI box).  When it drifts, run with --durations=15 to find the
+# hot tests; the scenario matrix keeps only a 6-cell representative subset
+# in tier-1 — everything else belongs behind the slow marker.
 python -m pytest -x -q

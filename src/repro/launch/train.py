@@ -50,7 +50,7 @@ def main(argv=None):
                     help="use the reduced smoke config for --arch")
     ap.add_argument("--optimizer", default="gwt",
                     choices=["gwt", "adam", "adam_mini", "muon", "galore",
-                             "apollo", "fira", "sgd"])
+                             "apollo", "fira", "adarankgrad", "rso", "sgd"])
     ap.add_argument("--level", type=int, default=2)
     ap.add_argument("--host", default="adam",
                     choices=["adam", "adam_mini", "muon"])
@@ -64,6 +64,20 @@ def main(argv=None):
                          "when the checkpoint was written under the "
                          "other codec")
     ap.add_argument("--alpha", type=float, default=0.25)
+    ap.add_argument("--finetune", default="none", choices=["none", "lora"],
+                    help="'lora': freeze the base model (zero optimizer "
+                         "state via the engine's frozen rule) and train "
+                         "injected low-rank adapters on the attention/MLP "
+                         "projections; composes with any --optimizer/"
+                         "--state-codec (the adapters' moments get "
+                         "compressed/quantized)")
+    ap.add_argument("--lora-rank", type=int, default=8)
+    ap.add_argument("--lora-alpha", type=float, default=16.0)
+    ap.add_argument("--base-ckpt", default="",
+                    help="checkpoint dir holding the pre-trained base "
+                         "(params-only restore via restore_params); with "
+                         "--finetune lora the restored weights become the "
+                         "frozen base")
     ap.add_argument("--lr", type=float, default=0.01)
     ap.add_argument("--steps", type=int, default=200)
     ap.add_argument("--batch", type=int, default=16)
@@ -181,6 +195,18 @@ def main(argv=None):
     params = mod.init(cfg, key)
     n_params = sum(x.size for x in jax.tree.leaves(params))
 
+    finetune_lora = args.finetune == "lora"
+    if finetune_lora and dp_spec is not None:
+        ap.error("--finetune lora does not compose with --dp-reduce yet "
+                 "(the sharded step reduces full-tree gradients; adapter-"
+                 "only reduction is future work) — drop --dp-reduce")
+    if args.base_ckpt:
+        base_params, base_step = CheckpointManager(
+            args.base_ckpt).restore_params(None, params)
+        params = base_params
+        print(f"restored pre-trained base from {args.base_ckpt} "
+              f"(step {base_step})")
+
     # Encoder-decoder batches carry the audio-frontend frame stub; the
     # adapter lives in the pipeline (WithEncoderFrames), not a monkey-patch.
     enc = cfg.arch_class == "encdec"
@@ -216,9 +242,21 @@ def main(argv=None):
                        "host": args.host, "impl": ctx.kernel_impl})
         if shardings is not None and shardings.opt is not None:
             opt_kw["state_shardings"] = shardings.opt["buckets"]
-    elif args.optimizer in ("galore", "apollo", "fira"):
+    elif args.optimizer in ("galore", "apollo", "fira", "adarankgrad",
+                            "rso"):
         opt_kw.update({"rank_frac": 0.25, "alpha": args.alpha})
     optimizer = make_optimizer(args.optimizer, args.lr, args.steps, **opt_kw)
+
+    base_like = params  # full-Adam reference below counts the raw model
+    if finetune_lora:
+        from repro.models import lora
+        params = lora.inject(params, args.lora_rank,
+                             jax.random.fold_in(key, 777))
+        optimizer = lora.wrap_optimizer(optimizer)
+        n_adapter = sum(x.size for x in jax.tree.leaves(params["lora"]))
+        print(f"finetune=lora rank={args.lora_rank} alpha={args.lora_alpha} "
+              f"adapters={n_adapter/1e3:.1f}K params "
+              f"({n_adapter/max(n_params, 1):.4f} of base)")
 
     opt_shardings = None
     if shardings is not None:
@@ -249,7 +287,7 @@ def main(argv=None):
     # paper's memory tables are normalized to.
     from repro.optim.engine import state_bytes
     mem_bytes = state_bytes(optimizer, params)
-    adam_f32_bytes = state_bytes(optim.make("adam", lr=args.lr), params)
+    adam_f32_bytes = state_bytes(optim.make("adam", lr=args.lr), base_like)
     print(f"arch={cfg.name} params={n_params/1e6:.1f}M "
           f"optimizer={args.optimizer} codec={args.state_codec} "
           f"opt_state={mem_bytes/2**20:.2f}MiB "
@@ -267,9 +305,17 @@ def main(argv=None):
 
     # Raw (un-jitted) step: TrainLoop compiles it inside its donated
     # scan-over-chunk superstep (runtime/fault_tolerance.py).
-    train_step = mod.make_train_step(cfg, optimizer, accum_steps=args.accum,
-                                     ctx=ctx, dp_reduce=dp_spec,
-                                     shardings=shardings)
+    if finetune_lora:
+        from repro.models import lora
+        train_step = lora.make_train_step(mod, cfg, optimizer,
+                                          rank=args.lora_rank,
+                                          alpha=args.lora_alpha,
+                                          accum_steps=args.accum, ctx=ctx)
+    else:
+        train_step = mod.make_train_step(cfg, optimizer,
+                                         accum_steps=args.accum,
+                                         ctx=ctx, dp_reduce=dp_spec,
+                                         shardings=shardings)
     ckpt = CheckpointManager(args.ckpt_dir,
                              run_meta={"data": data_meta,
                                        "state_codec": args.state_codec}) \
@@ -353,7 +399,11 @@ def main(argv=None):
                                split="eval",
                                enc_frames=args.seq // 4 if enc else 0,
                                enc_dim=cfg.d_model if enc else 0)
-        evaluator = make_lm_evaluator(cfg, mod, eval_src,
+        eval_mod = mod
+        if finetune_lora:
+            from repro.models import lora
+            eval_mod = lora.loss_module(mod, args.lora_alpha, args.lora_rank)
+        evaluator = make_lm_evaluator(cfg, eval_mod, eval_src,
                                       n_batches=args.eval_batches, ctx=ctx)
 
     loop = TrainLoop(train_step, ckpt, source, ckpt_every=args.ckpt_every,

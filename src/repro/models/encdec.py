@@ -173,18 +173,20 @@ def loss_fn(cfg, params, batch, ctx: MeshContext = None) -> jax.Array:
 
 def make_train_step(cfg, optimizer, accum_steps: int = 1,
                     ctx: MeshContext = None, donate: bool = False,
-                    dp_reduce=None, shardings=None):
+                    dp_reduce=None, shardings=None, loss=None):
     """``donate=True`` jits with ``donate_argnums=(0, 1)`` — same
     single-buffered params/opt-state contract as ``lm.make_train_step``;
     ``dp_reduce`` switches to the mesh-aware sharded path (shard_map DP
     gradient reduction — see ``lm.make_sharded_train_step``) with this
-    module's encoder-decoder loss."""
+    module's encoder-decoder loss; ``loss=`` swaps the objective (the
+    LoRA merged-forward path)."""
     from repro.models.lm import make_sharded_train_step, microbatch_split
+    loss = loss_fn if loss is None else loss
     if isinstance(dp_reduce, str):
         from repro.distributed.compression import DPReduceSpec
         dp_reduce = DPReduceSpec.parse(dp_reduce)  # 'none' -> None
     if dp_reduce is not None:
-        return make_sharded_train_step(cfg, optimizer, loss_fn, ctx=ctx,
+        return make_sharded_train_step(cfg, optimizer, loss, ctx=ctx,
                                        dp_reduce=dp_reduce,
                                        accum_steps=accum_steps,
                                        shardings=shardings, donate=donate)
@@ -196,7 +198,7 @@ def make_train_step(cfg, optimizer, accum_steps: int = 1,
         def accum_body(carry, mb):
             gsum, lsum = carry
             l, g = jax.value_and_grad(
-                lambda p: loss_fn(cfg, p, mb, ctx=c))(params)
+                lambda p: loss(cfg, p, mb, ctx=c))(params)
             return (jax.tree.map(lambda a, b: a + b.astype(jnp.float32),
                                  gsum, g), lsum + l), None
 

@@ -141,3 +141,24 @@ def cross_entropy(logits: jax.Array, labels: jax.Array) -> jax.Array:
     lse = jax.scipy.special.logsumexp(logits, axis=-1)
     ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
     return jnp.mean(lse - ll)
+
+
+# ---------------------------------------------------------------------------
+# LoRA adapter pairs (repro.models.lora builds trees out of these)
+# ---------------------------------------------------------------------------
+
+def lora_pair_init(key: jax.Array, shape, rank: int, dtype=jnp.float32):
+    """Adapter pair for a (…, m, n) weight: ``a`` (…, m, r) fan-in normal,
+    ``b`` (…, r, n) zeros — so the delta ``a @ b`` is exactly zero at init.
+    Leading batch dims (stacked layers / experts) carry through."""
+    m, n = shape[-2], shape[-1]
+    a = jax.random.normal(key, tuple(shape[:-2]) + (m, rank), dtype)
+    a = a / jnp.asarray(np.sqrt(m), dtype)
+    b = jnp.zeros(tuple(shape[:-2]) + (rank, n), dtype)
+    return {"a": a, "b": b}
+
+
+def lora_delta(pair, alpha: float, rank: int) -> jax.Array:
+    """(…, m, n) update: (a @ b) · α/r — batched matmul on leading dims."""
+    return (pair["a"] @ pair["b"]) * jnp.asarray(alpha / rank,
+                                                 pair["a"].dtype)

@@ -603,7 +603,8 @@ def make_sharded_train_step(cfg, optimizer, loss, *, ctx: MeshContext,
 
 def make_train_step(cfg, optimizer, accum_steps: int = 1,
                     grad_shardings=None, ctx: MeshContext = None,
-                    donate: bool = False, dp_reduce=None, shardings=None):
+                    donate: bool = False, dp_reduce=None, shardings=None,
+                    loss=None):
     """Gradient-accumulated train step: ``batch`` is the GLOBAL batch; a
     shard-preserving reshape feeds a microbatch ``lax.scan``.
 
@@ -626,11 +627,12 @@ def make_train_step(cfg, optimizer, accum_steps: int = 1,
     arrays it passes in.  ``donate=False`` keeps the historical behaviour
     of returning the raw traceable function.
     """
+    loss = loss_fn if loss is None else loss  # `loss=`: swap the objective
     if isinstance(dp_reduce, str):
         from repro.distributed.compression import DPReduceSpec
         dp_reduce = DPReduceSpec.parse(dp_reduce)  # 'none' -> None
     if dp_reduce is not None:
-        return make_sharded_train_step(cfg, optimizer, loss_fn, ctx=ctx,
+        return make_sharded_train_step(cfg, optimizer, loss, ctx=ctx,
                                        dp_reduce=dp_reduce,
                                        accum_steps=accum_steps,
                                        shardings=shardings, donate=donate)
@@ -644,7 +646,7 @@ def make_train_step(cfg, optimizer, accum_steps: int = 1,
         def accum_body(carry, mb):
             gsum, lsum = carry
             l, g = jax.value_and_grad(
-                lambda p: loss_fn(cfg, p, mb, ctx=c))(params)
+                lambda p: loss(cfg, p, mb, ctx=c))(params)
             if grad_shardings is not None:
                 g = jax.tree.map(jax.lax.with_sharding_constraint, g,
                                  grad_shardings)

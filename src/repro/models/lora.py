@@ -1,0 +1,138 @@
+"""LoRA fine-tune path: frozen base + adapter leaves, substrate-agnostic.
+
+The paper claims GWT compacts optimizer states for *fine-tuning* as well as
+pre-training; this module opens that workload without touching any model's
+forward code.  The parameter tree becomes::
+
+    {"base": <original params>,            # bitwise-frozen
+     "lora": <mirror subtree of {"a", "b"} pairs for target projections>}
+
+and the forward pass runs on ``merge(tree)`` — base plus ``a @ b · α/r``
+deltas — so every substrate (llama/moe/ssm/xlstm/encdec) works unchanged:
+``merge`` only needs dict-shaped params, which all builders produce.
+
+The frozen base is expressed through the engine's existing leaf-plan
+routing: ``wrap_optimizer`` reassigns every ``base/…`` leaf to a zero-state
+``FROZEN`` rule and leaves ``lora/…`` leaves on the inner optimizer's own
+assignment — so ``engine.state_bytes`` counts adapter state only, and
+"gwt2-LoRA" means the adapters' Adam moments live in wavelet subspaces.
+"""
+
+from __future__ import annotations
+
+from types import SimpleNamespace
+from typing import Tuple
+import zlib
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import lora_pair_init, lora_delta
+from repro.optim import engine
+
+# Last path segments that receive adapters: the attention and MLP
+# projections (the paper's module scope).  Stacked-layer (n_periods, m, n)
+# and per-expert (E, m, n) leaves batch through lora_pair_init unchanged.
+LORA_TARGETS = ("wq", "wk", "wv", "wo", "w_gate", "w_up", "w_down")
+
+
+def _is_target(name: str, leaf) -> bool:
+    return name in LORA_TARGETS and getattr(leaf, "ndim", 0) >= 2
+
+
+def inject(params, rank: int, key: jax.Array,
+           targets: Tuple[str, ...] = LORA_TARGETS):
+    """Wrap ``params`` into a ``{"base", "lora"}`` tree.
+
+    ``merge(inject(p, r, k)) == p`` bitwise at init (``b`` starts at zero).
+    Adapter keys derive from the leaf path (crc32-fold), so the same seed
+    gives the same adapters regardless of dict iteration order.
+    """
+
+    def mirror(tree, prefix):
+        out = {}
+        for k, v in tree.items():
+            path = f"{prefix}/{k}" if prefix else str(k)
+            if isinstance(v, dict):
+                sub = mirror(v, path)
+                if sub:
+                    out[k] = sub
+            elif _is_target(str(k), v):
+                kk = jax.random.fold_in(key, zlib.crc32(path.encode()))
+                out[k] = lora_pair_init(kk, v.shape, rank, jnp.float32)
+        return out
+
+    return {"base": params, "lora": mirror(params, "")}
+
+
+def merge(tree, alpha: float, rank: int):
+    """Plain params: base + adapter deltas (cast back to base dtype)."""
+
+    def walk(base, lora):
+        out = {}
+        for k, v in base.items():
+            sub = lora.get(k) if isinstance(lora, dict) else None
+            if isinstance(v, dict):
+                out[k] = walk(v, sub or {})
+            elif sub is not None:
+                d = lora_delta(sub, alpha, rank)
+                out[k] = (v.astype(jnp.float32) + d.astype(jnp.float32)
+                          ).astype(v.dtype)
+            else:
+                out[k] = v
+        return out
+
+    return walk(tree["base"], tree["lora"])
+
+
+def split_base(tree):
+    """The frozen base subtree (for bitwise-frozen assertions)."""
+    return tree["base"]
+
+
+# Zero-state rule for frozen leaves: empty state dict -> zero bytes in
+# ``state_bytes``, nothing to decode/encode, and the scan body returns the
+# parameter unchanged (bitwise).
+FROZEN = engine.LeafRule(kind="frozen",
+                         init=lambda p: {},
+                         update=lambda g, p, s, step, lid: (p, s))
+
+
+def wrap_optimizer(inner) -> "engine.Optimizer":
+    """Route ``base/…`` leaves to ``FROZEN``; everything else (the adapter
+    ``a``/``b`` leaves) keeps the inner optimizer's own rule assignment —
+    including its codec, so ``--state-codec int8`` quantizes adapter
+    moments exactly as it would full-model moments."""
+    eng = inner.engine
+    if eng is None:
+        raise ValueError("LoRA wrapping needs an engine-built optimizer")
+
+    def assign(path, leaf):
+        if path == "base" or path.startswith("base/"):
+            return FROZEN
+        return eng.assign(path, leaf)
+
+    return engine.build(assign, bucketed=eng.bucketed,
+                        codec=eng.codec, codec_seed=eng.codec_seed)
+
+
+def loss_module(mod, alpha: float, rank: int):
+    """A ``loss_fn``-shaped shim over ``mod`` that merges before the
+    forward — drop-in for ``make_lm_evaluator`` and ``make_train_step``'s
+    ``loss=`` hook."""
+
+    def loss_fn(cfg, tree, batch, ctx=None):
+        return mod.loss_fn(cfg, merge(tree, alpha, rank), batch, ctx=ctx)
+
+    return SimpleNamespace(loss_fn=loss_fn)
+
+
+def make_train_step(mod, cfg, optimizer, *, rank: int, alpha: float,
+                    accum_steps: int = 1, ctx=None, donate: bool = False):
+    """``mod.make_train_step`` with the merged-forward loss.  Gradients
+    flow to base leaves too (merge is differentiable); the FROZEN rule
+    discards them, keeping the base bitwise-stable."""
+    shim = loss_module(mod, alpha, rank)
+    return mod.make_train_step(cfg, optimizer, accum_steps=accum_steps,
+                               ctx=ctx, donate=donate,
+                               loss=shim.loss_fn)

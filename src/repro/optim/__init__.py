@@ -8,7 +8,7 @@ constructor for the unrolled per-leaf reference semantics.
 from repro.optim.base import Optimizer, default_eligible, global_norm
 from repro.optim import engine, hosts, schedules
 from repro.optim.standard import adam, adam_mini, muon, sgd, from_host
-from repro.optim.lowrank import galore, apollo, fira
+from repro.optim.lowrank import galore, apollo, fira, adarankgrad, rso
 
 
 def make(name: str, **kw) -> Optimizer:
@@ -16,6 +16,7 @@ def make(name: str, **kw) -> Optimizer:
     registry = {
         "adam": adam, "adam_mini": adam_mini, "muon": muon, "sgd": sgd,
         "galore": galore, "apollo": apollo, "fira": fira, "gwt": gwt,
+        "adarankgrad": adarankgrad, "rso": rso,
     }
     if name not in registry:
         raise ValueError(f"unknown optimizer {name!r}; choices: {sorted(registry)}")
@@ -23,5 +24,5 @@ def make(name: str, **kw) -> Optimizer:
 
 
 __all__ = ["Optimizer", "make", "adam", "adam_mini", "muon", "sgd", "galore",
-           "apollo", "fira", "from_host", "default_eligible", "global_norm",
-           "engine", "hosts", "schedules"]
+           "apollo", "fira", "adarankgrad", "rso", "from_host",
+           "default_eligible", "global_norm", "engine", "hosts", "schedules"]

@@ -66,9 +66,20 @@ def flatten_with_paths(tree):
 # Default deny-list: parameters that never get subspace compression
 # (embeddings, output head, norms, biases, 1-D tensors).  Matches the
 # paper's module-wise strategy ("attention and MLP modules", the rest on
-# plain Adam).
+# plain Adam).  Recurrent-dynamics kernels are also denied: the SSM
+# selective-scan projections (``x_proj`` packs [dt|B|C] channels of
+# unrelated scales, ``dt_proj`` feeds a softplus time-step) and the
+# xLSTM gate kernels (``w_igate``/``w_fgate`` parameterize exponential
+# gates) couple heterogeneous dynamics along the transformed axis —
+# outside the paper's attention/MLP scope and numerically brittle under
+# a shared wavelet/low-rank basis.
 _DENY_SUBSTRINGS = ("embed", "lm_head", "norm", "scale", "bias", "pos_",
-                    "router", "a_log", "dt_bias", "conv")
+                    "router", "a_log", "dt_bias", "conv",
+                    "x_proj", "dt_proj", "igate", "fgate")
+
+# Exact last-path-segment denials: the sLSTM recurrent kernel ``r``
+# (H, dh, 4·dh) stacks four gate blocks of a state-to-state recurrence.
+_DENY_SEGMENTS = ("r",)
 
 
 def default_eligible(path: str, leaf: jax.Array) -> bool:
@@ -80,6 +91,8 @@ def default_eligible(path: str, leaf: jax.Array) -> bool:
     """
     lname = path.lower()
     if any(s in lname for s in _DENY_SUBSTRINGS):
+        return False
+    if lname.rsplit("/", 1)[-1] in _DENY_SEGMENTS:
         return False
     return leaf.ndim >= 2
 

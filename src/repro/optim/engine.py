@@ -100,6 +100,7 @@ class Bucket(NamedTuple):
     rule: LeafRule
     indices: Tuple[int, ...]   # positions in flatten order
     paths: Tuple[str, ...]
+    template: Any              # ShapeDtypeStruct of the (shared) leaf shape
 
 
 class LeafPlan(NamedTuple):
@@ -125,9 +126,12 @@ def build_plan(assign: Callable[[str, Any], LeafRule], params) -> LeafPlan:
     buckets = []
     for rule, idxs in sorted(groups.values(), key=lambda g: g[1][0]):
         first = paths[idxs[0]].replace("/", ".")
+        lf = leaves[idxs[0]]
         buckets.append(Bucket(name=f"{rule.kind}__{first}", rule=rule,
                               indices=tuple(idxs),
-                              paths=tuple(paths[i] for i in idxs)))
+                              paths=tuple(paths[i] for i in idxs),
+                              template=jax.ShapeDtypeStruct(
+                                  tuple(lf.shape), jnp.dtype(lf.dtype))))
     return LeafPlan(tuple(buckets), tuple(paths), len(paths))
 
 
@@ -148,9 +152,40 @@ class Engine:
         self.bucketed = bucketed
         self.codec = codec_lib.get_codec(codec)
         self.codec_seed = codec_seed
+        self._validated: set = set()  # (kind, sig, shape, dtype) probed OK
 
     def plan(self, params) -> LeafPlan:
-        return build_plan(self.assign, params)
+        plan = build_plan(self.assign, params)
+        self._validate(plan)
+        return plan
+
+    def _validate(self, plan: LeafPlan) -> None:
+        """Fail at build time — with the leaf path — when a rule cannot
+        handle a leaf it was assigned (e.g. a wavelet rule forced onto a
+        non-divisible recurrent kernel).  ``eval_shape`` probes ``init`` and
+        one raw-state ``update`` per distinct ``(kind, sig, shape, dtype)``
+        signature, so the error surfaces before any scan/jit trace and the
+        steady-state cost is a memoized set lookup."""
+        for b in plan.buckets:
+            leaf = jax.ShapeDtypeStruct(b.template.shape, b.template.dtype)
+            key = (b.rule.kind, b.rule.sig, leaf.shape, str(leaf.dtype))
+            if key in self._validated:
+                continue
+
+            def probe(p):
+                st = b.rule.init(p)
+                g = jnp.zeros(p.shape, p.dtype)
+                step = jnp.zeros((), jnp.int32)
+                return b.rule.update(g, p, st, step, 0)
+
+            try:
+                jax.eval_shape(probe, leaf)
+            except Exception as e:  # noqa: BLE001 — re-raise with the path
+                raise ValueError(
+                    f"rule {b.rule.kind!r} cannot handle leaf "
+                    f"{b.paths[0]!r} (shape={tuple(leaf.shape)}, "
+                    f"dtype={leaf.dtype}): {e}") from e
+            self._validated.add(key)
 
     def codec_key(self) -> Optional[jax.Array]:
         """The concrete uint32 rounding key ``init`` stores in

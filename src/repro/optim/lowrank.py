@@ -5,6 +5,13 @@
 * **APOLLO** (Zhu et al. 2024): SVD-free — random projection + channel-wise
   gradient scaling; full-rank update direction.
 * **Fira** (Chen et al. 2024): GaLore + scaled full-rank residual + NL.
+* **AdaRankGrad** (arXiv 2410.17881): per-leaf rank adapted from the gradient
+  spectrum's energy decay — the projector keeps only the top-k singular
+  directions covering a ``tau`` fraction of squared energy, with k monotone
+  non-increasing over refreshes; moments are rotated into each new basis.
+* **RSO** (arXiv 2502.07222): seeded randomized-subspace projection — an
+  orthonormalized Gaussian projector resampled every ``update_gap`` steps
+  (SVD-free), with the same moment rotation across resamples.
 
 All share the per-leaf routing of GWT: eligible ≥2-D weights get compressed
 states, the rest run plain Adam.  ``rank_frac`` (e.g. 1/4, 1/8) matches the
@@ -63,6 +70,48 @@ def _down(g, proj, left):
 
 def _up(rlow, proj, left):
     return proj @ rlow if left else rlow @ jnp.swapaxes(proj, -1, -2)
+
+
+def _orth_rand_projector(key, p, r, left, dtype=jnp.float32):
+    """Orthonormalized Gaussian projector: QR of an (…, m, r) normal draw.
+
+    m ≥ r always holds (r ≤ min(m, n) via ``_rank``), so reduced QR yields
+    exactly orthonormal columns: PᵀP = I_r.
+    """
+    m = p.shape[-2] if left else p.shape[-1]
+    shape = tuple(p.shape[:-2]) + (m, r)
+    q, _ = jnp.linalg.qr(jax.random.normal(key, shape, dtype))
+    return q
+
+
+def _effective_rank(s, tau, r_max):
+    """#singular values whose squared energy reaches a ``tau`` fraction.
+
+    ``s``: (…, k) singular values, descending.  Returns a float32 scalar in
+    [1, r_max]; batch dims collapse via max (one rank per leaf, so the masked
+    projector stays a single static-shape buffer).
+    """
+    e = s.astype(jnp.float32) ** 2
+    c = jnp.cumsum(e, axis=-1)
+    tot = jnp.maximum(c[..., -1:], 1e-30)
+    k = jnp.sum((c / tot) < tau, axis=-1) + 1
+    return jnp.max(jnp.clip(k, 1, r_max)).astype(jnp.float32)
+
+
+def _rotate_moments(hstate, proj_old, proj_new, left):
+    """Carry Adam moments across a basis change via T = P_newᵀ P_old.
+
+    m' = T m (left) rotates the first moment exactly; v' = (T∘T) v is the
+    standard nonnegative approximation for the second moment.
+    """
+    t = jnp.swapaxes(proj_new, -1, -2) @ proj_old
+    if left:
+        m = t @ hstate["m"].astype(jnp.float32)
+        v = (t * t) @ hstate["v"].astype(jnp.float32)
+    else:
+        m = hstate["m"].astype(jnp.float32) @ jnp.swapaxes(t, -1, -2)
+        v = hstate["v"].astype(jnp.float32) @ jnp.swapaxes(t * t, -1, -2)
+    return {"m": m.astype(hstate["m"].dtype), "v": v.astype(hstate["v"].dtype)}
 
 
 def _make_lowrank(name: str,
@@ -161,6 +210,105 @@ def _make_lowrank(name: str,
         bucketed=bucketed, codec=state_codec)
 
 
+def _make_adaptive(name: str,
+                   lr, rank, rank_frac, alpha, update_gap, tau,
+                   seed: int, eligible, state_dtype,
+                   b1=0.9, b2=0.999, eps=1e-6,
+                   bucketed: bool = True, state_codec="f32") -> Optimizer:
+    """Template for the two adaptive-subspace rules (adarankgrad / rso).
+
+    Both refresh the projector every ``update_gap`` steps and rotate the
+    host moments into the new basis (``_rotate_moments``) instead of letting
+    them go stale; they differ only in where the new basis comes from —
+    gradient SVD + energy-masked columns vs a seeded orthonormal random draw.
+    """
+    lr = _norm_lr(lr)
+    host = hosts_lib.adam(b1, b2, eps, state_dtype)
+    elig = eligible or default_eligible
+
+    def leaf_is_lowrank(path, p):
+        return elig(path, p) and p.ndim >= 2 and min(p.shape[-2:]) >= 2
+
+    def plain_update(g, p, state, step, leaf_id):
+        precond, _, lr_mult, hstate = host.update(g, state["host"], step)
+        q = p.astype(jnp.float32) - (lr(step) * lr_mult) * precond.astype(jnp.float32)
+        return q.astype(p.dtype), {"host": hstate}
+
+    plain_rule = engine.LeafRule(
+        kind="plain", init=lambda p: {"host": host.init(p)},
+        update=plain_update, slots={"host": host.slots})
+
+    def adaptive_init(p):
+        r = _rank(p, rank, rank_frac)  # r_max for adarankgrad
+        left = _project_left(p)
+        m = p.shape[-2] if left else p.shape[-1]
+        low_shape = (tuple(p.shape[:-2]) + (r, p.shape[-1])) if left \
+            else (tuple(p.shape[:-2]) + (p.shape[-2], r))
+        st = {"host": host.init(jax.ShapeDtypeStruct(low_shape, state_dtype)),
+              "proj": jnp.zeros(tuple(p.shape[:-2]) + (m, r), jnp.float32)}
+        if name == "adarankgrad":
+            st["rank"] = jnp.asarray(float(r), jnp.float32)
+        return st
+
+    def adaptive_update(g, p, state, step, leaf_id):
+        out = dict(state)
+        r = _rank(p, rank, rank_frac)
+        left = _project_left(p)
+        refresh = (step % update_gap) == 0
+
+        if name == "adarankgrad":
+            def proj_rank_new():
+                g32 = g.astype(jnp.float32)
+                u, s, vt = jnp.linalg.svd(g32, full_matrices=False)
+                basis = u[..., :, :r] if left \
+                    else jnp.swapaxes(vt, -1, -2)[..., :, :r]
+                # monotone non-increasing rank schedule: never exceed the
+                # previous effective rank (init = r_max).
+                k = jnp.minimum(_effective_rank(s, tau, r), state["rank"])
+                mask = (jnp.arange(r) < k).astype(jnp.float32)
+                return basis * mask, k
+
+            def proj_rank_old():
+                return state["proj"].astype(jnp.float32), state["rank"]
+
+            proj, out["rank"] = jax.lax.cond(refresh, proj_rank_new,
+                                             proj_rank_old)
+        else:  # rso: deterministic per-(leaf, epoch) orthonormal projector
+            key = jax.random.fold_in(jax.random.key(seed + leaf_id),
+                                     step // update_gap)
+            proj = jax.lax.cond(refresh,
+                                lambda: _orth_rand_projector(key, p, r, left),
+                                lambda: state["proj"].astype(jnp.float32))
+        out["proj"] = proj
+
+        # rotate moments into the refreshed basis (zeros at step 0 stay
+        # zeros: proj_old is the zero init, so T = 0 on the first refresh).
+        hstate = jax.lax.cond(
+            refresh,
+            lambda: _rotate_moments(state["host"],
+                                    state["proj"].astype(jnp.float32),
+                                    proj, left),
+            lambda: state["host"])
+
+        rlow = _down(g, proj, left)
+        rtilde, _, lr_mult, out["host"] = host.update(rlow, hstate, step)
+        delta = _up(rtilde, proj, left)
+        q = p.astype(jnp.float32) - (lr(step) * lr_mult * alpha) * delta.astype(jnp.float32)
+        return q.astype(p.dtype), out
+
+    adaptive_slots = {"host": host.slots, "proj": False}
+    if name == "adarankgrad":
+        adaptive_slots["rank"] = False
+    adaptive_rule = engine.LeafRule(kind=name, init=adaptive_init,
+                                    update=adaptive_update,
+                                    slots=adaptive_slots)
+
+    return engine.build(
+        lambda path, leaf: (adaptive_rule if leaf_is_lowrank(path, leaf)
+                            else plain_rule),
+        bucketed=bucketed, codec=state_codec)
+
+
 def galore(lr, rank: Optional[int] = None, rank_frac: float = 0.25,
            alpha: float = 0.25, update_gap: int = 200,
            eligible: Callable = None, state_dtype=jnp.float32,
@@ -189,3 +337,31 @@ def fira(lr, rank: Optional[int] = None, rank_frac: float = 0.25,
                          eligible, True, limiter.DEFAULT_GAMMA, 0,
                          state_dtype, bucketed=bucketed,
                          state_codec=state_codec)
+
+
+def adarankgrad(lr, rank: Optional[int] = None, rank_frac: float = 0.25,
+                alpha: float = 0.25, update_gap: int = 200, tau: float = 0.9,
+                eligible: Callable = None, state_dtype=jnp.float32,
+                bucketed: bool = True, state_codec="f32") -> Optimizer:
+    """AdaRankGrad (arXiv 2410.17881): adaptive per-leaf rank from the
+    gradient spectrum's energy decay, re-projected on a step schedule.
+
+    ``rank``/``rank_frac`` set the rank *ceiling* r_max (static buffer
+    shape); the live rank is a traced state scalar, monotone non-increasing
+    across refreshes, realized as column masking of the projector.
+    """
+    return _make_adaptive("adarankgrad", lr, rank, rank_frac, alpha,
+                          update_gap, tau, 0, eligible, state_dtype,
+                          bucketed=bucketed, state_codec=state_codec)
+
+
+def rso(lr, rank: Optional[int] = None, rank_frac: float = 0.25,
+        alpha: float = 0.25, update_gap: int = 200, seed: int = 0,
+        eligible: Callable = None, state_dtype=jnp.float32,
+        bucketed: bool = True, state_codec="f32") -> Optimizer:
+    """RSO (arXiv 2502.07222): seeded randomized-subspace projection —
+    orthonormal Gaussian projector resampled every ``update_gap`` steps,
+    SVD-free, moments rotated across resamples."""
+    return _make_adaptive("rso", lr, rank, rank_frac, alpha, update_gap,
+                          0.0, seed, eligible, state_dtype,
+                          bucketed=bucketed, state_codec=state_codec)

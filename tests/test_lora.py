@@ -1,0 +1,170 @@
+"""LoRA fine-tune path: frozen base, adapter-only optimizer state, and
+the launcher-level pre-train → checkpoint → fine-tune round trip."""
+
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs, optim
+from repro.checkpoint.manager import CheckpointManager
+from repro.models import lm, lora
+from repro.optim.engine import state_bytes
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+RANK, ALPHA = 4, 8.0
+
+
+def _cfg():
+    return configs.LLAMA["llama-60m"].with_(
+        n_layers=2, d_model=32, n_heads=2, n_kv_heads=2, head_dim=16,
+        d_ff=64, vocab=64)
+
+
+def _batch(cfg, seed=0, B=2, S=16):
+    toks = jax.random.randint(jax.random.key(seed), (B, S), 0, cfg.vocab)
+    return {"tokens": toks, "labels": jnp.roll(toks, -1, axis=1)}
+
+
+def test_inject_merge_identity_at_init():
+    """b starts at zero, so merge(inject(p)) == p bitwise — a LoRA run
+    begins exactly at the restored base model."""
+    cfg = _cfg()
+    params = lm.init(cfg, jax.random.key(0))
+    tree = lora.inject(params, RANK, jax.random.key(7))
+    merged = lora.merge(tree, ALPHA, RANK)
+    for a, b in zip(jax.tree.leaves(merged), jax.tree.leaves(params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # adapters exist exactly for the target projections
+    apaths = {p for p, _ in zip(*__import__(
+        "repro.optim.base", fromlist=["flatten_with_paths"]
+    ).flatten_with_paths(tree["lora"])[:2])}
+    assert apaths  # non-empty
+    assert all(p.rsplit("/", 2)[-2] in lora.LORA_TARGETS or
+               p.rsplit("/", 1)[-1] in ("a", "b") for p in apaths)
+
+
+def test_inject_deterministic_in_key():
+    cfg = _cfg()
+    params = lm.init(cfg, jax.random.key(0))
+    t1 = lora.inject(params, RANK, jax.random.key(7))
+    t2 = lora.inject(params, RANK, jax.random.key(7))
+    for a, b in zip(jax.tree.leaves(t1), jax.tree.leaves(t2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_training_moves_adapters_only_and_state_is_adapter_sized():
+    """Two real-gradient steps: base bitwise-frozen, adapters move, and
+    ``state_bytes`` counts EXACTLY the adapter moments (adam inner: m+v
+    f32 per adapter element, plus the step counter)."""
+    cfg = _cfg()
+    params = lm.init(cfg, jax.random.key(0))
+    tree = lora.inject(params, RANK, jax.random.key(7))
+    opt = lora.wrap_optimizer(optim.make("adam", lr=0.01))
+    st = opt.init(tree)
+
+    n_adapter = sum(l.size for l in jax.tree.leaves(tree["lora"]))
+    assert state_bytes(opt, tree) == 2 * n_adapter * 4 + 4
+
+    step = jax.jit(lora.make_train_step(lm, cfg, opt, rank=RANK,
+                                        alpha=ALPHA))
+    t, s = tree, st
+    for i in range(2):
+        t, s, m = step(t, s, _batch(cfg, seed=i))
+    for a, b in zip(jax.tree.leaves(t["base"]), jax.tree.leaves(params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    moved = [not np.array_equal(np.asarray(a), np.asarray(b))
+             for a, b in zip(jax.tree.leaves(t["lora"]),
+                             jax.tree.leaves(tree["lora"]))]
+    assert any(moved)
+    assert float(m["loss"]) > 0.0
+
+
+def test_lora_composes_with_gwt_and_int8():
+    """The adapters' moments go through the wavelet rule + int8 codec —
+    state must be strictly smaller than raw-adam-on-adapters."""
+    cfg = _cfg()
+    params = lm.init(cfg, jax.random.key(0))
+    tree = lora.inject(params, 8, jax.random.key(7))  # rank 8: divisible
+    adam_bytes = state_bytes(lora.wrap_optimizer(optim.make("adam",
+                                                            lr=0.01)), tree)
+    gwt8_bytes = state_bytes(lora.wrap_optimizer(
+        optim.make("gwt", lr=0.01, level=2, state_codec="int8")), tree)
+    assert gwt8_bytes < adam_bytes
+    opt = lora.wrap_optimizer(optim.make("gwt", lr=0.01, level=2,
+                                         state_codec="int8"))
+    step = jax.jit(lora.make_train_step(lm, cfg, opt, rank=8, alpha=ALPHA))
+    t, s, m = step(tree, opt.init(tree), _batch(cfg))
+    assert np.isfinite(float(m["loss"]))
+
+
+def test_wrap_optimizer_requires_engine():
+    from repro.optim.base import Optimizer
+    with pytest.raises(ValueError, match="engine"):
+        lora.wrap_optimizer(Optimizer(lambda p: {}, lambda g, s, p: (p, s)))
+
+
+# ---------------------------------------------------------------------------
+# Launcher-level: pre-train → checkpoint → `--finetune lora --base-ckpt`
+# → the frozen base must equal the pre-trained weights bitwise across the
+# whole fine-tune run, and the fine-tune checkpoint must restore.
+# ---------------------------------------------------------------------------
+
+def _run(args, timeout=600):
+    env = dict(os.environ, PYTHONPATH="src", JAX_PLATFORMS="cpu")
+    r = subprocess.run([sys.executable, "-m", "repro.launch.train", *args],
+                       cwd=REPO, env=env, capture_output=True, text=True,
+                       timeout=timeout)
+    assert r.returncode == 0, r.stdout + r.stderr
+    return r.stdout + r.stderr
+
+
+def test_launcher_pretrain_then_lora_finetune(tmp_path):
+    base_dir, ft_dir = str(tmp_path / "base"), str(tmp_path / "ft")
+    common = ["--arch", "llama-60m", "--smoke", "--lr", "0.01",
+              "--batch", "2", "--seq", "32", "--log-every", "4"]
+    _run([*common, "--optimizer", "adam", "--steps", "6",
+          "--ckpt-dir", base_dir, "--ckpt-every", "6"])
+    log = _run([*common, "--optimizer", "gwt", "--level", "2",
+                "--finetune", "lora", "--lora-rank", "8",
+                "--base-ckpt", base_dir, "--steps", "6",
+                "--ckpt-dir", ft_dir, "--ckpt-every", "6", "--seed", "0"])
+    assert "restored pre-trained base" in log
+    assert "finetune=lora" in log
+
+    # reconstruct the like-trees in-process to read both checkpoints
+    cfg = configs.get_smoke("llama-60m")
+    params = lm.init(cfg, jax.random.key(0))
+    base_params, base_step = CheckpointManager(base_dir).restore_params(
+        None, params)
+    assert base_step == 6
+    like_tree = lora.inject(base_params, 8,
+                            jax.random.fold_in(jax.random.key(0), 777))
+    ft_tree, ft_step = CheckpointManager(ft_dir).restore_params(
+        None, like_tree)
+    assert ft_step == 6
+    # base bitwise-frozen across the fine-tune run
+    for a, b in zip(jax.tree.leaves(ft_tree["base"]),
+                    jax.tree.leaves(base_params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # adapters trained: at least one `b` leaf left zero-init
+    moved = [not np.array_equal(np.asarray(a), np.asarray(b))
+             for a, b in zip(jax.tree.leaves(ft_tree["lora"]),
+                             jax.tree.leaves(like_tree["lora"]))]
+    assert any(moved)
+
+
+def test_launcher_rejects_lora_with_dp_reduce():
+    env = dict(os.environ, PYTHONPATH="src", JAX_PLATFORMS="cpu")
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.train", "--arch", "llama-60m",
+         "--smoke", "--finetune", "lora", "--dp-reduce", "exact",
+         "--steps", "1"],
+        cwd=REPO, env=env, capture_output=True, text=True, timeout=300)
+    assert r.returncode != 0
+    assert "--finetune lora does not compose with --dp-reduce" in r.stderr

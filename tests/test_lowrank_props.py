@@ -1,0 +1,145 @@
+"""Property tests for the adaptive-subspace rules (adarankgrad / rso).
+
+hypothesis is optional: the conftest shim runs each property over a
+fixed-seed sample grid (endpoints + midpoint per strategy) when it isn't
+installed — same invariants, fewer draws.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from conftest import given, settings, st
+
+from repro import optim
+from repro.optim.lowrank import (_down, _effective_rank,
+                                 _orth_rand_projector, _rotate_moments, _up)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(4, 32), st.integers(1, 4), st.integers(0, 1000))
+def test_rso_projector_orthonormal(m, r, seed):
+    """QR-orthonormalized random projector: PᵀP = I_r (m ≥ r always —
+    ``_rank`` caps r at min(m, n))."""
+    r = min(r, m)
+    p = jnp.zeros((m, 2 * m))
+    for left in (True, False):
+        proj = _orth_rand_projector(jax.random.key(seed), p, r, left)
+        assert proj.shape[-1] == r
+        gram = np.asarray(jnp.swapaxes(proj, -1, -2) @ proj)
+        np.testing.assert_allclose(gram, np.eye(r), atol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 1000), st.integers(0, 8))
+def test_rso_resample_seed_determinism(seed, epoch):
+    """Same (seed, epoch) -> bitwise-identical projector (the resume
+    contract: a restarted run redraws the exact same subspace); a
+    different epoch draws a different one."""
+    p = jnp.zeros((16, 32))
+    key = jax.random.fold_in(jax.random.key(seed), epoch)
+    p1 = _orth_rand_projector(key, p, 4, True)
+    p2 = _orth_rand_projector(jax.random.fold_in(jax.random.key(seed),
+                                                 epoch), p, 4, True)
+    np.testing.assert_array_equal(np.asarray(p1), np.asarray(p2))
+    p3 = _orth_rand_projector(jax.random.fold_in(jax.random.key(seed),
+                                                 epoch + 1), p, 4, True)
+    assert not np.array_equal(np.asarray(p1), np.asarray(p3))
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(2, 8), st.integers(0, 500))
+def test_projection_idempotence(r, seed):
+    """For an orthonormal projector, down∘up is the identity on the
+    subspace: Pᵀ(P x) = x (left) and (x Pᵀ)P = x (right)."""
+    for left in (True, False):
+        p = jnp.zeros((16, 24))
+        proj = _orth_rand_projector(jax.random.key(seed), p, r, left)
+        low_shape = (r, 24) if left else (16, r)
+        x = jax.random.normal(jax.random.key(seed + 1), low_shape)
+        roundtrip = _down(_up(x, proj, left), proj, left)
+        np.testing.assert_allclose(np.asarray(roundtrip), np.asarray(x),
+                                   atol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 16), st.integers(0, 200))
+def test_effective_rank_bounds_and_tau_monotonicity(r_max, seed):
+    """k ∈ [1, r_max]; k is non-decreasing in the energy fraction tau
+    (more retained energy can only need more directions)."""
+    s = jnp.sort(jnp.abs(jax.random.normal(jax.random.key(seed),
+                                           (20,))))[::-1]
+    ks = [float(_effective_rank(s, tau, r_max))
+          for tau in (0.1, 0.5, 0.9, 0.99)]
+    for k in ks:
+        assert 1.0 <= k <= r_max
+    assert ks == sorted(ks)
+
+
+def test_effective_rank_exact_cases():
+    # one dominant direction -> rank 1 regardless of tau < 1
+    s = jnp.asarray([10.0, 0.0, 0.0, 0.0])
+    assert float(_effective_rank(s, 0.9, 4)) == 1.0
+    # flat spectrum: tau of the energy needs ceil(tau * k) directions
+    s = jnp.ones((4,))
+    assert float(_effective_rank(s, 0.9, 4)) == 4.0
+    assert float(_effective_rank(s, 0.5, 4)) == 2.0
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 100))
+def test_moment_rotation_preserves_subspace_content(seed):
+    """Rotating moments into the SAME basis is the identity (T = PᵀP = I);
+    v stays nonnegative under any rotation (T∘T has nonneg entries)."""
+    p = jnp.zeros((16, 32))
+    proj = _orth_rand_projector(jax.random.key(seed), p, 4, True)
+    m = jax.random.normal(jax.random.key(seed + 1), (4, 32))
+    v = jnp.abs(jax.random.normal(jax.random.key(seed + 2), (4, 32)))
+    h = {"m": m, "v": v}
+    same = _rotate_moments(h, proj, proj, True)
+    np.testing.assert_allclose(np.asarray(same["m"]), np.asarray(m),
+                               atol=1e-5)
+    other = _orth_rand_projector(jax.random.key(seed + 3), p, 4, True)
+    rot = _rotate_moments(h, proj, other, True)
+    assert float(jnp.min(rot["v"])) >= 0.0
+
+
+def test_adarankgrad_rank_schedule_monotone():
+    """Run the ACTUAL rule (update_gap=1: refresh every step) on gradients
+    whose spectrum collapses over time; the per-leaf rank state must be
+    monotone non-increasing — the schedule only tightens."""
+    params = {"w": jax.random.normal(jax.random.key(0), (16, 32))}
+    opt = optim.make("adarankgrad", lr=0.01, rank=8, update_gap=1, tau=0.5)
+    st_ = opt.init(params)
+    p = params
+    traj = []
+    for i in range(6):
+        # progressively lower-rank gradients: top direction dominates more
+        u = jax.random.normal(jax.random.key(10 + i), (16, 1))
+        v = jax.random.normal(jax.random.key(20 + i), (1, 32))
+        noise = jax.random.normal(jax.random.key(30 + i), (16, 32))
+        g = {"w": u @ v + noise * (0.5 ** i)}
+        p, st_ = jax.jit(opt.update)(g, st_, p)
+        bname = [k for k in st_["buckets"] if k.startswith("adarankgrad")][0]
+        traj.append(float(jnp.ravel(st_["buckets"][bname]["rank"])[0]))
+    assert all(a >= b for a, b in zip(traj, traj[1:])), traj
+    assert traj[-1] < 8.0  # it actually tightened on a collapsing spectrum
+
+
+def test_adarankgrad_masked_projector_columns():
+    """Columns past the live rank are exactly zero in the stored projector
+    (masking is the static-shape realization of the dynamic rank)."""
+    params = {"w": jax.random.normal(jax.random.key(0), (16, 32))}
+    opt = optim.make("adarankgrad", lr=0.01, rank=8, update_gap=1, tau=0.5)
+    st_ = opt.init(params)
+    u = jax.random.normal(jax.random.key(1), (16, 1))
+    v = jax.random.normal(jax.random.key(2), (1, 32))
+    g = {"w": u @ v + 1e-3 * jax.random.normal(jax.random.key(3), (16, 32))}
+    _, st_ = jax.jit(opt.update)(g, st_, params)
+    bname = [k for k in st_["buckets"] if k.startswith("adarankgrad")][0]
+    bstate = st_["buckets"][bname]
+    k = int(jnp.ravel(bstate["rank"])[0])
+    proj = np.asarray(bstate["proj"])[0]  # (m, r_max), bucket-stacked
+    assert k < 8
+    np.testing.assert_array_equal(proj[:, k:], 0.0)
+    assert np.abs(proj[:, :k]).max() > 0.0
