@@ -36,7 +36,8 @@ python -m benchmarks.run --only trace --quick
 
 echo "== train-step runtime benchmark (pipelined loop + donation gate; =="
 echo "== fails on >20% steps/sec regression vs committed BENCH_step_cpu, =="
-echo "== or if gwt+int8 opt state is <10x under full-Adam f32) =="
+echo "== if gwt+int8 opt state is <10x under full-Adam f32, or if the =="
+echo "== fused-write one-launch peak live bytes >= the staged pipeline) =="
 python -m benchmarks.run --only step --quick
 
 echo "== optimizer-state substrate accounting (family x codec matrix; =="

@@ -72,6 +72,7 @@ def gwt(lr: Schedule | float,
         state_dtype=jnp.float32,
         wavelet: str = "haar",
         impl: str = "auto",
+        fused_write: bool = True,
         bucketed: bool = True,
         state_shardings=None,
         state_codec="f32") -> Optimizer:
@@ -84,7 +85,10 @@ def gwt(lr: Schedule | float,
     (``repro.optim.codec``): int8 composes multiplicatively with the
     wavelet subspace — host moments live on the ``A_l`` band AND are
     stored blocked-quantized.  On the fused kernel path the requantize
-    epilogue runs inside the kernel (``ops.fused_update_q8``)."""
+    epilogue runs inside the kernel (``ops.fused_update_q8``).
+    ``fused_write=False`` keeps the DWT+Adam core kernel but stages the
+    limiter/step/param-write outside it (the pre-megakernel dataflow,
+    materializing g̃) — a benchmarking baseline, not a production knob."""
     from repro.optim import codec as codec_lib
     if wavelet not in ("haar", "db2"):
         raise ValueError(f"unknown wavelet {wavelet!r}")
@@ -168,39 +172,45 @@ def gwt(lr: Schedule | float,
             return _apply(p, g_tilde, lr(step), lr_mult, alpha), out
 
         def vector_update(g_stk, p_stk, state, step, leaf_ids):
-            # One fused-kernel launch for the whole (L, m, n) bucket; the
-            # limiter is per-leaf (one Frobenius norm each) via vmap.
-            g_tilde, lr_mult, hstate = core(g_stk, state["host"], step)
-            out = {"host": hstate, "prev_norm": state["prev_norm"]}
-            if use_limiter:
-                g_tilde, out["prev_norm"] = jax.vmap(
-                    functools.partial(limiter.limit, gamma=gamma))(
-                    g_tilde, state["prev_norm"])
-            return _apply(p_stk, g_tilde, lr(step), lr_mult, alpha), out
+            # Fused-write megakernel: ONE launch for the whole (L, m, n)
+            # bucket performs DWT→Adam→inverse→limit→param-write — the
+            # limiter, bias-corrected step, and weight decay all run in
+            # the kernel epilogue, so g̃ never round-trips HBM.
+            from repro.kernels.gwt_adam import ops as gwt_ops  # lazy
+            gt = jnp.swapaxes(g_stk, -1, -2) if swap else g_stk
+            pt = jnp.swapaxes(p_stk, -1, -2) if swap else p_stk
+            new_p, new_norm, hstate = gwt_ops.fused_write_update(
+                gt, pt, state["host"], step, state["prev_norm"],
+                lr_t=lr(step), alpha=alpha, weight_decay=weight_decay,
+                gamma=gamma, use_limiter=use_limiter, level=level,
+                impl=impl, **adam_kw)
+            if swap:
+                new_p = jnp.swapaxes(new_p, -1, -2)
+            return new_p, {"host": hstate, "prev_norm": new_norm}
 
         def vector_update_q8(g_stk, p_stk, state, step, leaf_ids,
                              codec_key):
-            # codec-native fast path: the kernel dequantizes the blocked
-            # moments, updates, and requantizes in its epilogue — decoded
-            # f32 moments never round-trip through HBM.  Slot salts (m=0,
-            # v=1) match codec.map_slots' sorted-key order, so this path
-            # and the generic scan wrap produce the same rounding bits.
+            # codec-native fused-write path: the kernel dequantizes the
+            # blocked moments, updates, requantizes, AND applies
+            # limit+step+write in one launch — decoded f32 moments and g̃
+            # never round-trip HBM.  Slot salts (m=0, v=1) match
+            # codec.map_slots' sorted-key order, so this path and the
+            # generic scan wrap produce the same rounding bits.
             from repro.kernels.gwt_adam import ops as gwt_ops  # lazy
             gt = jnp.swapaxes(g_stk, -1, -2) if swap else g_stk
-            g_tilde, lr_mult, hstate = gwt_ops.fused_update_q8(
-                gt, state["host"], step, codec_key, leaf_ids, level=level,
-                block=cdc.block, impl=impl, **adam_kw)
+            pt = jnp.swapaxes(p_stk, -1, -2) if swap else p_stk
+            new_p, new_norm, hstate = gwt_ops.fused_write_update_q8(
+                gt, pt, state["host"], step, codec_key, leaf_ids,
+                state["prev_norm"], lr_t=lr(step), alpha=alpha,
+                weight_decay=weight_decay, gamma=gamma,
+                use_limiter=use_limiter, level=level, block=cdc.block,
+                impl=impl, **adam_kw)
             if swap:
-                g_tilde = jnp.swapaxes(g_tilde, -1, -2)
-            out = {"host": hstate, "prev_norm": state["prev_norm"]}
-            if use_limiter:
-                g_tilde, out["prev_norm"] = jax.vmap(
-                    functools.partial(limiter.limit, gamma=gamma))(
-                    g_tilde, state["prev_norm"])
-            return _apply(p_stk, g_tilde, lr(step), lr_mult, alpha), out
+                new_p = jnp.swapaxes(new_p, -1, -2)
+            return new_p, {"host": hstate, "prev_norm": new_norm}
 
         vu, native = None, False
-        if use_fused:
+        if use_fused and fused_write:
             vu, native = (vector_update_q8, True) if quant \
                 else (vector_update, False)
         return engine.LeafRule(

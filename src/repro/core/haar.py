@@ -138,7 +138,9 @@ def lowpass(g: jax.Array, level: int) -> jax.Array:
 # ---------------------------------------------------------------------------
 
 _SQRT3 = 1.7320508075688772
-_DB2_LO = tuple(c / (4 * np.sqrt(2)) for c in
+# Python floats, not numpy scalars: weak-typed taps let the transform run
+# in the input dtype (a numpy float64 scalar would promote bf16 -> f32).
+_DB2_LO = tuple(float(c / (4 * np.sqrt(2))) for c in
                 (1 + _SQRT3, 3 + _SQRT3, 3 - _SQRT3, 1 - _SQRT3))
 _DB2_HI = (_DB2_LO[3], -_DB2_LO[2], _DB2_LO[1], -_DB2_LO[0])
 
@@ -168,8 +170,11 @@ def _db2_level_inv(lo: jax.Array, hi: jax.Array) -> jax.Array:
 
 
 def db2_forward(g: jax.Array, level: int):
+    """Like :func:`haar_forward`, db2 preserves the input dtype: a bf16
+    ``state_dtype`` host must see the same moment/band dtypes under either
+    wavelet."""
     _check(g.shape[-1], level)
-    a = g.astype(jnp.float32)
+    a = g
     details: List[jax.Array] = []
     for _ in range(level):
         a, d = _db2_level_fwd(a)

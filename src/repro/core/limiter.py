@@ -3,7 +3,10 @@
     if ||G̃_t||_F / ||G̃_{t-1}||_F > γ:   G̃_t ← G̃_t / ||G̃_t||_F · γ · ||G̃_{t-1}||_F
 
 Stateless helper: caller threads ``prev_norm`` (one f32 scalar per tensor).
-``prev_norm == 0`` (first step) disables limiting for that step.
+``prev_norm == 0`` (first step) disables limiting for that step.  A
+zero-norm *update* (e.g. a fully-masked LoRA adapter step or an all-zero
+gradient) keeps the previous norm: returning 0 would wipe the limiter
+history and disable limiting on the next real step.
 """
 
 from __future__ import annotations
@@ -27,4 +30,5 @@ def limit(update: jax.Array, prev_norm: jax.Array, gamma: float = DEFAULT_GAMMA
         1.0,
     )
     limited = update * scale.astype(update.dtype)
-    return limited, (norm * scale).astype(jnp.float32)
+    new_prev = jnp.where(norm > 0, norm * scale, prev_norm)
+    return limited, new_prev.astype(jnp.float32)

@@ -93,7 +93,7 @@ def compressible(shape: Sequence[int], level: int) -> bool:
     return len(shape) >= 2 and level > 0 and shape[-1] % (1 << level) == 0
 
 
-def reduce_terms(g: jax.Array, level: int, detail_dtype
+def reduce_terms(g: jax.Array, level: int, detail_dtype, impl: str = "jnp"
                  ) -> Tuple[jax.Array, List[jax.Array]]:
     """Per-shard wire terms: f32 approximation band + quantized details.
 
@@ -103,7 +103,21 @@ def reduce_terms(g: jax.Array, level: int, detail_dtype
     actually moves (XLA's all-reduce may still accumulate wider
     internally and round once; see ``_psum_like_sum``).  The error of the
     whole scheme is the quantization applied HERE plus that single
-    accumulation rounding."""
+    accumulation rounding.
+
+    ``impl`` pallas/interpret routes the split through the fused
+    quantize+pack Pallas kernel (``haar_dwt.ops.dwt_wire``): the detail
+    cast happens at the tile write, so the f32 detail intermediates never
+    materialize in HBM.  The butterfly is elementwise — no reductions —
+    so the kernel's terms are bitwise the jnp ones regardless of tiling
+    (pinned by tests/test_kernels.py)."""
+    if impl not in ("jnp", "auto", None):
+        from repro.kernels.haar_dwt import ops as dwt_ops
+        lead = g.shape[:-1]
+        flat = g.astype(jnp.float32).reshape(-1, g.shape[-1])
+        bands = dwt_ops.dwt_wire(flat, level, detail_dtype, impl=impl)
+        return (bands[0].reshape(*lead, -1),
+                [d.reshape(*lead, -1) for d in bands[1:]])
     a, ds = haar.haar_forward(g.astype(jnp.float32), level)
     return a, [d.astype(detail_dtype) for d in ds]
 
@@ -118,18 +132,21 @@ def reconstruct(a: jax.Array, ds: Sequence[jax.Array], n) -> jax.Array:
 
 
 def compressed_psum_mean(g: jax.Array, axis_name, level: int = 2,
-                         detail_dtype=jnp.bfloat16) -> jax.Array:
+                         detail_dtype=jnp.bfloat16,
+                         impl: str = "jnp") -> jax.Array:
     """Mean-reduce ``g`` over ``axis_name`` inside shard_map/pmap context,
     wavelet-split: A_l in f32, D_k in ``detail_dtype``.
 
     ``detail_dtype=None`` (or ``level == 0``) is the EXACT mode: a single
     f32 ``psum`` — the sharded train path's lossless reduction, bitwise
     equal to a sequential device-order sum (tests/test_sharded_train.py).
-    Non-compressible leaves always take that exact path."""
+    Non-compressible leaves always take that exact path.  ``impl`` routes
+    the wavelet split through the fused Pallas quantize+pack kernel (see
+    :func:`reduce_terms`)."""
     n = jax.lax.psum(1, axis_name)
     if detail_dtype is None or level == 0 or not compressible(g.shape, level):
         return jax.lax.psum(g.astype(jnp.float32), axis_name) / n
-    a, ds = reduce_terms(g, level, detail_dtype)
+    a, ds = reduce_terms(g, level, detail_dtype, impl)
     a = jax.lax.psum(a, axis_name)
     ds = [jax.lax.psum(d, axis_name) for d in ds]
     return reconstruct(a, ds, n)
@@ -155,7 +172,8 @@ def local_residual(gc: jax.Array, a: jax.Array, ds) -> jax.Array:
 
 
 def compressed_psum_mean_ef(g: jax.Array, err: jax.Array, axis_name,
-                            level: int = 2, detail_dtype=jnp.bfloat16
+                            level: int = 2, detail_dtype=jnp.bfloat16,
+                            impl: str = "jnp"
                             ) -> Tuple[jax.Array, jax.Array]:
     """:func:`compressed_psum_mean` with error feedback: returns
     ``(mean, new_err)``.  Non-compressible/exact leaves take the exact
@@ -165,8 +183,7 @@ def compressed_psum_mean_ef(g: jax.Array, err: jax.Array, axis_name,
         return jax.lax.psum(g.astype(jnp.float32), axis_name) / n, \
             jnp.zeros_like(err)
     gc = g.astype(jnp.float32) + err
-    a, ds = haar.haar_forward(gc, level)
-    ds = [d.astype(detail_dtype) for d in ds]
+    a, ds = reduce_terms(gc, level, detail_dtype, impl)
     new_err = local_residual(gc, a, ds)
     a = jax.lax.psum(a, axis_name)
     ds = [jax.lax.psum(d, axis_name) for d in ds]
@@ -267,7 +284,8 @@ def _psum_like_sum(stack: jax.Array) -> jax.Array:
 
 
 def make_compressed_grad_reducer(mesh, axis: str = "data", level: int = 2,
-                                 detail_dtype=jnp.bfloat16):
+                                 detail_dtype=jnp.bfloat16,
+                                 impl: str = "jnp"):
     """Tree-wise reducer: local per-shard grads -> mean over the DP axis.
 
     ``mesh`` may be a concrete Mesh or a MeshContext.  Expects grad leaves
@@ -280,7 +298,8 @@ def make_compressed_grad_reducer(mesh, axis: str = "data", level: int = 2,
         def one(g):
             fn = compat.shard_map(
                 functools.partial(compressed_psum_mean, axis_name=axis,
-                                  level=level, detail_dtype=detail_dtype),
+                                  level=level, detail_dtype=detail_dtype,
+                                  impl=impl),
                 mesh,
                 in_specs=P(axis, *([None] * (g.ndim - 1))),
                 out_specs=P(axis, *([None] * (g.ndim - 1))),

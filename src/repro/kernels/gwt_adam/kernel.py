@@ -23,6 +23,17 @@ The detail bands are *never* materialized in HBM — exactly the paper's
 Bias correction (``lr_mult``) and the norm-growth limiter ratio are scalars
 applied by the caller (ops.py) — the limiter needs the global norm, which is
 reduced from the per-tile partials this kernel emits.
+
+**Fused-write megakernel** (``gwt_adam_tile_fused{,_q8}``): the full
+DWT→Adam→inverse→limit→param-write chain in ONE launch per ``(L, m, n)``
+bucket.  The leaf axis is folded into the grid (no vmap), the per-leaf
+``‖G̃‖`` reduction runs as a two-phase pass over the row tiles with the
+``new_norm`` output block as the on-chip accumulator (all ``phases·gm``
+grid steps of leaf ``l`` map it to the same block — consecutive revisits
+keep it resident in VMEM on TPU), and the epilogue applies the norm-growth
+limiter, the bias-corrected step size, and weight decay before writing the
+parameter tile.  ``G̃`` never round-trips HBM and the gradient never lives
+alongside its transform.
 """
 
 from __future__ import annotations
@@ -269,3 +280,277 @@ def gwt_adam_tile(g: jax.Array, m_st: jax.Array, v_st: jax.Array, *,
         ],
         interpret=interpret,
     )(g, m_st, v_st)
+
+
+# ---------------------------------------------------------------------------
+# Fused-write megakernel: one launch per (L, m, n) bucket does
+# DWT -> Adam -> inverse -> norm-growth limiter -> parameter write.
+# ---------------------------------------------------------------------------
+
+def fused_row_block(m: int, n: int, level: int) -> int:
+    """Row-tile height for the fused-write kernels: full-width stripes so
+    the per-leaf ssq accumulation sees one tile per grid step.  Working set
+    ≈ (G + P + G̃ + P' + M,V in/out) ≈ 6·bm·n·4B; cap ~4MB."""
+    bm = 8 if m % 8 == 0 else m
+    while bm * 2 <= min(m, 1024) and m % (bm * 2) == 0 \
+            and 6 * (bm * 2) * n * 4 <= 4 * 1024 * 1024:
+        bm *= 2
+    return bm
+
+
+def _limiter_scale(norm, prev, gamma: float):
+    """The norm-growth limiter ratio — term-for-term ``core.limiter.limit``
+    (bitwise parity with the staged path is a test invariant)."""
+    safe_prev = jnp.where(prev > 0, prev, norm)
+    return jnp.where(norm > gamma * safe_prev,
+                     gamma * safe_prev / jnp.maximum(norm, 1e-30),
+                     jnp.float32(1.0))
+
+
+def _body_fused(level: int, b1: float, b2: float, eps: float, gamma: float,
+                use_limiter: bool, wd: bool,
+                g_ref, p_ref, m_ref, v_ref, pn_ref, ss_ref, wd_ref,
+                p_out_ref, m_out_ref, v_out_ref, norm_ref):
+    """Grid ``(L, phases, gm)`` — leaf outermost, row tiles innermost; the
+    ``norm_ref`` output block (one per leaf, revisited every step of that
+    leaf) doubles as the cross-tile ssq accumulator.  Phase 0 accumulates
+    ``‖G̃_l‖²``; phase 1 recomputes the tile (the op is bandwidth-bound —
+    recompute is cheaper than an HBM round trip of G̃) and applies
+    limiter + step + weight decay + write.  ``use_limiter=False`` runs the
+    single write phase only."""
+    phase = pl.program_id(1)
+    i = pl.program_id(2)
+    gm = pl.num_programs(2)
+    x = g_ref[0].astype(jnp.float32)
+    out, m, v = _dht_adam_core(x, m_ref[0].astype(jnp.float32),
+                               v_ref[0].astype(jnp.float32),
+                               level, b1, b2, eps)
+    gt = out.astype(g_ref.dtype)
+    prev = pn_ref[0, 0]
+
+    def write(scale):
+        limited = gt * scale.astype(gt.dtype)
+        p32 = p_ref[0].astype(jnp.float32)
+        new_p = p32 - ss_ref[0, 0] * limited.astype(jnp.float32)
+        if wd:
+            new_p = new_p - wd_ref[0, 0] * p32
+        p_out_ref[0] = new_p.astype(p_out_ref.dtype)
+        m_out_ref[0] = m.astype(m_out_ref.dtype)
+        v_out_ref[0] = v.astype(v_out_ref.dtype)
+
+    if not use_limiter:
+        write(jnp.float32(1.0))
+        norm_ref[0, 0] = prev  # limiter off: prev_norm passes through
+        return
+
+    xr = gt.astype(jnp.float32)
+    part = jnp.sum(xr * xr)
+
+    @pl.when(phase == 0)
+    def _():
+        acc = jnp.where(i == 0, jnp.float32(0.0), norm_ref[0, 0])
+        norm_ref[0, 0] = acc + part
+
+    @pl.when(phase == 1)
+    def _():
+        norm = jnp.sqrt(norm_ref[0, 0])
+        scale = _limiter_scale(norm, prev, gamma)
+        write(scale)
+
+        @pl.when(i == gm - 1)
+        def _():
+            # zero-norm step preserves limiter history (core.limiter)
+            norm_ref[0, 0] = jnp.where(norm > 0, norm * scale, prev)
+
+
+def gwt_adam_tile_fused(g: jax.Array, p: jax.Array, m_st: jax.Array,
+                        v_st: jax.Array, prev_norm: jax.Array,
+                        step_size: jax.Array, wd_coef: jax.Array, *,
+                        level: int, gamma: float, use_limiter: bool,
+                        weight_decay: bool, b1: float = 0.9,
+                        b2: float = 0.999, eps: float = 1e-6,
+                        interpret: bool = False):
+    """Fused-write update for a whole ``(L, m, n)`` bucket in ONE launch.
+
+    ``prev_norm``: f32 ``(L,)`` per-leaf limiter state; ``step_size`` /
+    ``wd_coef``: f32 scalars (bias-corrected lr·α and lr·weight_decay,
+    computed by ops.py).  Returns ``(new_p, new_m, new_v, new_norm)`` with
+    ``new_norm`` f32 ``(L,)``.
+    """
+    L, mm, nn = g.shape
+    if nn % (1 << level) != 0:
+        raise ValueError(f"n={nn} not divisible by 2^{level}")
+    bm = fused_row_block(mm, nn, level)
+    gm = mm // bm
+    na = nn >> level
+    phases = 2 if use_limiter else 1
+    pn2 = prev_norm.astype(jnp.float32).reshape(L, 1)
+    ss2 = jnp.asarray(step_size, jnp.float32).reshape(1, 1)
+    wd2 = jnp.asarray(wd_coef, jnp.float32).reshape(1, 1)
+    tile = lambda w: pl.BlockSpec((1, bm, w), lambda l, ph, i: (l, i, 0))
+    leaf_scalar = pl.BlockSpec((1, 1), lambda l, ph, i: (l, 0))
+    scalar = pl.BlockSpec((1, 1), lambda l, ph, i: (0, 0))
+    new_p, new_m, new_v, new_norm = pl.pallas_call(
+        functools.partial(_body_fused, level, b1, b2, eps, gamma,
+                          use_limiter, weight_decay),
+        grid=(L, phases, gm),
+        in_specs=[tile(nn), tile(nn), tile(na), tile(na),
+                  leaf_scalar, scalar, scalar],
+        out_specs=[tile(nn), tile(na), tile(na), leaf_scalar],
+        out_shape=[
+            jax.ShapeDtypeStruct((L, mm, nn), p.dtype),
+            jax.ShapeDtypeStruct((L, mm, na), m_st.dtype),
+            jax.ShapeDtypeStruct((L, mm, na), v_st.dtype),
+            jax.ShapeDtypeStruct((L, 1), jnp.float32),
+        ],
+        # in-place write semantics: p/m/v are updated in their own
+        # buffers (each phase-1 tile reads its block before writing it,
+        # and phase 0 never touches p).  NOT prev_norm→new_norm: phase 0
+        # accumulates ssq into the norm output while phase 1 still reads
+        # the history from pn_ref — aliasing them would clobber it.
+        input_output_aliases={1: 0, 2: 1, 3: 2},
+        interpret=interpret,
+    )(g, p, m_st, v_st, pn2, ss2, wd2)
+    return new_p, new_m, new_v, new_norm.reshape(L)
+
+
+def _body_fused_q8(level: int, b1: float, b2: float, eps: float,
+                   gamma: float, use_limiter: bool, wd: bool, block: int,
+                   g_ref, p_ref, qm_ref, sm_ref, qv_ref, sv_ref,
+                   saltm_ref, saltv_ref, pn_ref, ss_ref, wd_ref,
+                   p_out_ref, qm_out_ref, sm_out_ref, qv_out_ref,
+                   sv_out_ref, norm_ref):
+    """q8 sibling of ``_body_fused``: blocked-int8 moments are dequantized
+    in the prologue and stochastically requantized in the write phase (the
+    rounding bits are a pure function of (salt, flat index), so the
+    phase-1 recompute requantizes identically)."""
+    phase = pl.program_id(1)
+    i = pl.program_id(2)
+    gm = pl.num_programs(2)
+    x = g_ref[0].astype(jnp.float32)
+    bm, bn = x.shape
+    bna = bn >> level
+    sb = (bm * bna) // block
+
+    def dequant(q_ref, s_ref):
+        q = q_ref[0].astype(jnp.float32).reshape(sb, block)
+        return (q * s_ref[0][:, 0][:, None]).reshape(bm, bna)
+
+    out, m, v = _dht_adam_core(x, dequant(qm_ref, sm_ref),
+                               dequant(qv_ref, sv_ref), level, b1, b2, eps)
+    gt = out.astype(g_ref.dtype)
+    prev = pn_ref[0, 0]
+
+    base = i * (bm * bna)
+    idx = (base
+           + jax.lax.broadcasted_iota(jnp.int32, (sb, block), 0) * block
+           + jax.lax.broadcasted_iota(jnp.int32, (sb, block), 1))
+
+    def requant(arr, salt, q_out, s_out):
+        blocks = arr.reshape(sb, block)
+        absmax = jnp.max(jnp.abs(blocks), axis=1)
+        scale = absmax * jnp.float32(1.0 / 127.0)
+        inv = jnp.where(scale > 0, 1.0 / scale, 0.0).astype(jnp.float32)
+        y = blocks * inv[:, None]
+        lo = jnp.floor(y)
+        q = lo + (codec_lib.uniform01(salt, idx) < (y - lo)).astype(
+            jnp.float32)
+        q_out[0] = jnp.clip(q, -127.0, 127.0).astype(jnp.int8).reshape(
+            bm, bna)
+        s_out[0] = scale[:, None]
+
+    def write(scale):
+        limited = gt * scale.astype(gt.dtype)
+        p32 = p_ref[0].astype(jnp.float32)
+        new_p = p32 - ss_ref[0, 0] * limited.astype(jnp.float32)
+        if wd:
+            new_p = new_p - wd_ref[0, 0] * p32
+        p_out_ref[0] = new_p.astype(p_out_ref.dtype)
+        requant(m, saltm_ref[0, 0], qm_out_ref, sm_out_ref)
+        requant(v, saltv_ref[0, 0], qv_out_ref, sv_out_ref)
+
+    if not use_limiter:
+        write(jnp.float32(1.0))
+        norm_ref[0, 0] = prev
+        return
+
+    xr = gt.astype(jnp.float32)
+    part = jnp.sum(xr * xr)
+
+    @pl.when(phase == 0)
+    def _():
+        acc = jnp.where(i == 0, jnp.float32(0.0), norm_ref[0, 0])
+        norm_ref[0, 0] = acc + part
+
+    @pl.when(phase == 1)
+    def _():
+        norm = jnp.sqrt(norm_ref[0, 0])
+        scale = _limiter_scale(norm, prev, gamma)
+        write(scale)
+
+        @pl.when(i == gm - 1)
+        def _():
+            norm_ref[0, 0] = jnp.where(norm > 0, norm * scale, prev)
+
+
+def gwt_adam_tile_fused_q8(g: jax.Array, p: jax.Array, qm: jax.Array,
+                           sm: jax.Array, qv: jax.Array, sv: jax.Array,
+                           salt_m: jax.Array, salt_v: jax.Array,
+                           prev_norm: jax.Array, step_size: jax.Array,
+                           wd_coef: jax.Array, *, level: int, block: int,
+                           gamma: float, use_limiter: bool,
+                           weight_decay: bool, b1: float = 0.9,
+                           b2: float = 0.999, eps: float = 1e-6,
+                           interpret: bool = False):
+    """Fused-write q8 update for a whole ``(L, m, n)`` bucket in one launch.
+
+    ``qm/qv``: int8 ``(L, m, n>>level)``; ``sm/sv``: f32 ``(L, nb)``
+    flat-block scales; ``salt_m/salt_v``: uint32 ``(L,)`` per-leaf slot
+    salts.  Returns ``(new_p, qm', sm', qv', sv', new_norm)``.
+    """
+    L, mm, nn = g.shape
+    if nn % (1 << level) != 0:
+        raise ValueError(f"n={nn} not divisible by 2^{level}")
+    bm = q8_row_block(mm, nn, level, block)
+    if bm is None:
+        raise ValueError(f"q8 fused kernel: ({mm},{nn}) level={level} not "
+                         f"block-{block} alignable — use the jnp oracle")
+    na = nn >> level
+    nb = (mm * na) // block
+    sb = (bm * na) // block
+    gm = mm // bm
+    phases = 2 if use_limiter else 1
+    u32 = jnp.uint32
+    sm3, sv3 = sm.reshape(L, nb, 1), sv.reshape(L, nb, 1)
+    saltm2 = jnp.asarray(salt_m, u32).reshape(L, 1)
+    saltv2 = jnp.asarray(salt_v, u32).reshape(L, 1)
+    pn2 = prev_norm.astype(jnp.float32).reshape(L, 1)
+    ss2 = jnp.asarray(step_size, jnp.float32).reshape(1, 1)
+    wd2 = jnp.asarray(wd_coef, jnp.float32).reshape(1, 1)
+    tile = lambda w: pl.BlockSpec((1, bm, w), lambda l, ph, i: (l, i, 0))
+    stile = pl.BlockSpec((1, sb, 1), lambda l, ph, i: (l, i, 0))
+    leaf_scalar = pl.BlockSpec((1, 1), lambda l, ph, i: (l, 0))
+    scalar = pl.BlockSpec((1, 1), lambda l, ph, i: (0, 0))
+    new_p, qm2, smo, qv2, svo, new_norm = pl.pallas_call(
+        functools.partial(_body_fused_q8, level, b1, b2, eps, gamma,
+                          use_limiter, weight_decay, block),
+        grid=(L, phases, gm),
+        in_specs=[tile(nn), tile(nn), tile(na), stile, tile(na), stile,
+                  leaf_scalar, leaf_scalar, leaf_scalar, scalar, scalar],
+        out_specs=[tile(nn), tile(na), stile, tile(na), stile, leaf_scalar],
+        out_shape=[
+            jax.ShapeDtypeStruct((L, mm, nn), p.dtype),
+            jax.ShapeDtypeStruct((L, mm, na), jnp.int8),
+            jax.ShapeDtypeStruct((L, nb, 1), jnp.float32),
+            jax.ShapeDtypeStruct((L, mm, na), jnp.int8),
+            jax.ShapeDtypeStruct((L, nb, 1), jnp.float32),
+            jax.ShapeDtypeStruct((L, 1), jnp.float32),
+        ],
+        # in-place p and int8 payload/scale updates (reads precede writes
+        # within each phase-1 tile; phase 0 only reads).  prev_norm is
+        # deliberately NOT aliased to new_norm — see gwt_adam_tile_fused.
+        input_output_aliases={1: 0, 2: 1, 3: 2, 4: 3, 5: 4},
+        interpret=interpret,
+    )(g, p, qm, sm3, qv, sv3, saltm2, saltv2, pn2, ss2, wd2)
+    return (new_p, qm2, smo.reshape(L, nb), qv2, svo.reshape(L, nb),
+            new_norm.reshape(L))

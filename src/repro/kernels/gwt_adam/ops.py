@@ -134,3 +134,152 @@ def _fused_update_q8(g, qm, sm, qv, sv, step, key, leaf_ids, *,
     lr_mult = jnp.sqrt(1 - b2 ** t) / (1 - b1 ** t)
     return gt, lr_mult, {"m": {"q": qm2, "scale": sm2},
                          "v": {"q": qv2, "scale": sv2}}
+
+
+# ---------------------------------------------------------------------------
+# Fused-write (megakernel) path: limiter + bias-corrected apply + weight
+# decay + parameter write move INTO the launch — one kernel call per bucket
+# consumes (g, p, m, v, prev_norm) and emits (new_p, new_m, new_v,
+# new_norm); g̃ never round-trips HBM.
+# ---------------------------------------------------------------------------
+
+def _step_scalars(step, lr_t, alpha, weight_decay, b1, b2):
+    """Bias-corrected step size and weight-decay coefficient, computed
+    outside the kernel exactly as ``core.gwt._apply`` does (term order
+    matters for bitwise parity with the staged path)."""
+    t = step.astype(jnp.float32) + 1.0
+    lr_mult = jnp.sqrt(1 - b2 ** t) / (1 - b1 ** t)
+    step_size = (lr_t * lr_mult * alpha).astype(jnp.float32)
+    wd_coef = jnp.asarray(lr_t * weight_decay, jnp.float32)
+    return step_size, wd_coef
+
+
+def _norm_shapes(g):
+    """Normalize a leaf stack to ``(L, rows, n)``: 2-D single leaves gain a
+    unit leaf axis; 3-D+ leaves merge extra dims into the row axis (the
+    transform is per-row and the limiter norm per-leaf, so row-merging is
+    exact — and for q8 it preserves the codec's row-major flat order)."""
+    lead2 = g.ndim == 2
+    if lead2:
+        g = g[None]
+    shape = g.shape
+    if g.ndim > 3:
+        g = g.reshape(g.shape[0], -1, g.shape[-1])
+    return g, shape, lead2
+
+
+def fused_write_update(g: jax.Array, p: jax.Array, state: dict,
+                       step: jax.Array, prev_norm: jax.Array, *,
+                       lr_t, alpha: float, weight_decay: float,
+                       gamma: float, use_limiter: bool, level: int,
+                       b1: float = 0.9, b2: float = 0.999,
+                       eps: float = 1e-6, impl: str = "auto"):
+    """One launch per bucket: DWT→Adam→inverse→limit→param-write.
+
+    Returns ``(new_p, new_norm, new_state)``.  ``impl='jnp'`` routes to the
+    tiled ``ref.gwt_adam_fused`` oracle with the SAME row-block choice as
+    the kernel, so interpret/pallas bitwise-match it."""
+    impl = compat.resolve_kernel_impl(impl)
+    return _fused_write_update(
+        g, p, state["m"], state["v"], prev_norm, step, lr_t,
+        alpha=alpha, weight_decay=weight_decay, gamma=gamma,
+        use_limiter=use_limiter, level=level, b1=b1, b2=b2, eps=eps,
+        impl=impl)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "alpha", "weight_decay", "gamma", "use_limiter", "level",
+    "b1", "b2", "eps", "impl"))
+def _fused_write_update(g, p, m_st, v_st, prev_norm, step, lr_t, *,
+                        alpha, weight_decay, gamma, use_limiter, level,
+                        b1, b2, eps, impl):
+    from repro.kernels.gwt_adam import kernel, ref  # noqa: F811 — local
+    step_size, wd_coef = _step_scalars(step, lr_t, alpha, weight_decay,
+                                       b1, b2)
+    g3, gshape, lead2 = _norm_shapes(g)
+    p3, _, _ = _norm_shapes(p)
+    m3, _, _ = _norm_shapes(m_st)
+    v3, _, _ = _norm_shapes(v_st)
+    pn = prev_norm.reshape(g3.shape[0])
+    L, mm, nn = g3.shape
+    kw = dict(level=level, gamma=gamma, use_limiter=use_limiter,
+              weight_decay=weight_decay != 0, b1=b1, b2=b2, eps=eps)
+    if impl in ("pallas", "interpret"):
+        new_p, m, v, new_norm = kernel.gwt_adam_tile_fused(
+            g3, p3, m3, v3, pn, step_size, wd_coef,
+            interpret=impl == "interpret", **kw)
+    else:
+        new_p, m, v, new_norm = ref.gwt_adam_fused(
+            g3, p3, m3, v3, pn, step_size, wd_coef,
+            bm=kernel.fused_row_block(mm, nn, level), **kw)
+    new_p = new_p.reshape(gshape)
+    mshape = gshape[:-1] + (nn >> level,)
+    m, v = m.reshape(mshape), v.reshape(mshape)
+    if lead2:
+        new_p, m, v = new_p[0], m[0], v[0]
+        new_norm = new_norm.reshape(())
+    return new_p, new_norm, {"m": m, "v": v}
+
+
+def fused_write_update_q8(g: jax.Array, p: jax.Array, state: dict,
+                          step: jax.Array, key: jax.Array,
+                          leaf_ids: jax.Array, prev_norm: jax.Array, *,
+                          lr_t, alpha: float, weight_decay: float,
+                          gamma: float, use_limiter: bool, level: int,
+                          block: int = 64, b1: float = 0.9,
+                          b2: float = 0.999, eps: float = 1e-6,
+                          impl: str = "auto"):
+    """``fused_write_update`` over blocked-int8 moments: dequant → update →
+    stochastic requant AND limit+apply+write all inside the launch.  Shapes
+    the q8 kernel cannot tile block-aligned fall back to the jnp oracle —
+    a static, per-bucket decision.  Returns ``(new_p, new_norm,
+    new_state)`` in the encoded layout."""
+    impl = compat.resolve_kernel_impl(impl)
+    return _fused_write_update_q8(
+        g, p, state["m"]["q"], state["m"]["scale"],
+        state["v"]["q"], state["v"]["scale"], prev_norm, step, key,
+        leaf_ids, lr_t, alpha=alpha, weight_decay=weight_decay,
+        gamma=gamma, use_limiter=use_limiter, level=level, block=block,
+        b1=b1, b2=b2, eps=eps, impl=impl)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "alpha", "weight_decay", "gamma", "use_limiter", "level", "block",
+    "b1", "b2", "eps", "impl"))
+def _fused_write_update_q8(g, p, qm, sm, qv, sv, prev_norm, step, key,
+                           leaf_ids, lr_t, *, alpha, weight_decay, gamma,
+                           use_limiter, level, block, b1, b2, eps, impl):
+    from repro.kernels.gwt_adam import kernel, ref  # noqa: F811 — local
+    from repro.optim import codec as codec_lib
+    step_size, wd_coef = _step_scalars(step, lr_t, alpha, weight_decay,
+                                       b1, b2)
+    g3, gshape, lead2 = _norm_shapes(g)
+    p3, _, _ = _norm_shapes(p)
+    qm3, _, _ = _norm_shapes(qm)
+    qv3, _, _ = _norm_shapes(qv)
+    L, mm, nn = g3.shape
+    sm2, sv2 = sm.reshape(L, -1), sv.reshape(L, -1)
+    salt_m = codec_lib.slot_salt(key, step, 0, leaf_ids).reshape(L)
+    salt_v = codec_lib.slot_salt(key, step, 1, leaf_ids).reshape(L)
+    pn = prev_norm.reshape(L)
+    bm = kernel.q8_row_block(mm, nn, level, block)
+    kw = dict(level=level, block=block, gamma=gamma,
+              use_limiter=use_limiter, weight_decay=weight_decay != 0,
+              b1=b1, b2=b2, eps=eps)
+    if impl in ("pallas", "interpret") and bm is not None:
+        new_p, qm2, smo, qv2, svo, new_norm = kernel.gwt_adam_tile_fused_q8(
+            g3, p3, qm3, sm2, qv3, sv2, salt_m, salt_v, pn, step_size,
+            wd_coef, interpret=impl == "interpret", **kw)
+    else:
+        new_p, qm2, smo, qv2, svo, new_norm = ref.gwt_adam_fused_q8(
+            g3, p3, qm3, sm2, qv3, sv2, salt_m, salt_v, pn, step_size,
+            wd_coef, bm=bm if bm is not None else mm, **kw)
+    new_p = new_p.reshape(gshape)
+    qshape = gshape[:-1] + (nn >> level,)
+    qm2, qv2 = qm2.reshape(qshape), qv2.reshape(qshape)
+    smo, svo = smo.reshape(sm.shape), svo.reshape(sv.shape)
+    if lead2:
+        new_p, qm2, qv2 = new_p[0], qm2[0], qv2[0]
+        new_norm = new_norm.reshape(())
+    return new_p, new_norm, {"m": {"q": qm2, "scale": smo},
+                             "v": {"q": qv2, "scale": svo}}

@@ -70,3 +70,118 @@ def gwt_adam_tile_q8(g: jax.Array, qm: jax.Array, sm: jax.Array,
     qm2, sm2 = codec_lib.blocked_quant(m, salt_m, block)
     qv2, sv2 = codec_lib.blocked_quant(v, salt_v, block)
     return (gt, qm2, sm2, qv2, sv2, ssq)
+
+
+# ---------------------------------------------------------------------------
+# Fused-write (megakernel) oracles.  These replicate the kernel's exact
+# computation *shape* — per-(bm, n) row-stripe ssq partials accumulated
+# left-to-right — so the interpret backend bitwise-matches them: the only
+# order-sensitive op in the whole fused chain is the norm reduction, and
+# pinning its association to the kernel's tiling makes the parity exact
+# rather than ulp-close.  ``bm`` must be the kernel's row-block choice
+# (ops.py passes ``kernel.fused_row_block`` / ``kernel.q8_row_block``).
+# ---------------------------------------------------------------------------
+
+def _tiled_norm(gt: jax.Array, bm: int) -> jax.Array:
+    """‖gt‖ via the kernel's reduction order: one ``jnp.sum`` per (bm, n)
+    row stripe, partials added sequentially."""
+    xr = gt.astype(jnp.float32)
+    acc = None
+    for k in range(gt.shape[0] // bm):
+        t = xr[k * bm:(k + 1) * bm]
+        part = jnp.sum(t * t)
+        acc = part if acc is None else acc + part
+    return jnp.sqrt(acc)
+
+
+def _limit_write(gt, p, prev, step_size, wd_coef, *, gamma, use_limiter,
+                 weight_decay, bm):
+    from repro.kernels.gwt_adam import kernel
+    if use_limiter:
+        norm = _tiled_norm(gt, bm)
+        scale = kernel._limiter_scale(norm, prev, gamma)
+        new_norm = jnp.where(norm > 0, norm * scale, prev)
+    else:
+        scale = jnp.float32(1.0)
+        new_norm = prev
+    limited = gt * scale.astype(gt.dtype)
+    p32 = p.astype(jnp.float32)
+    new_p = p32 - step_size * limited.astype(jnp.float32)
+    if weight_decay:
+        new_p = new_p - wd_coef * p32
+    return new_p.astype(p.dtype), new_norm
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "level", "gamma", "use_limiter", "weight_decay", "bm", "b1", "b2", "eps"))
+def gwt_adam_fused(g: jax.Array, p: jax.Array, m_st: jax.Array,
+                   v_st: jax.Array, prev_norm: jax.Array,
+                   step_size: jax.Array, wd_coef: jax.Array, *,
+                   level: int, gamma: float, use_limiter: bool,
+                   weight_decay: bool, bm: int, b1: float = 0.9,
+                   b2: float = 0.999, eps: float = 1e-6):
+    """Fused-write oracle over a stacked ``(L, m, n)`` bucket.  Returns
+    ``(new_p, new_m, new_v, new_norm)`` with ``new_norm`` f32 ``(L,)``.
+
+    ``p``/``m``/``v`` ride the ``lax.scan`` carry and are updated leaf-by-
+    leaf with in-place dynamic-update-slice, so one leaf's working set is
+    the only live temp and donated inputs alias straight through to the
+    outputs — the one-launch dataflow the kernel has, visible to XLA
+    buffer assignment (the step benchmark's fused-vs-staged peak-live
+    gate rides on this)."""
+    def body(carry, xs):
+        p_c, m_c, v_c = carry
+        gl, pnl, l = xs
+        gt, m, v, _ = gwt_adam_tile(
+            gl, jax.lax.dynamic_index_in_dim(m_c, l, 0, keepdims=False),
+            jax.lax.dynamic_index_in_dim(v_c, l, 0, keepdims=False),
+            level=level, b1=b1, b2=b2, eps=eps)
+        new_p, new_norm = _limit_write(
+            gt, jax.lax.dynamic_index_in_dim(p_c, l, 0, keepdims=False),
+            pnl, step_size, wd_coef, gamma=gamma, use_limiter=use_limiter,
+            weight_decay=weight_decay, bm=bm)
+        p_c = jax.lax.dynamic_update_index_in_dim(p_c, new_p, l, 0)
+        m_c = jax.lax.dynamic_update_index_in_dim(m_c, m, l, 0)
+        v_c = jax.lax.dynamic_update_index_in_dim(v_c, v, l, 0)
+        return (p_c, m_c, v_c), new_norm
+    idx = jnp.arange(g.shape[0], dtype=jnp.int32)
+    (p, m_st, v_st), norms = jax.lax.scan(
+        body, (p, m_st, v_st), (g, prev_norm, idx))
+    return p, m_st, v_st, norms
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "level", "block", "gamma", "use_limiter", "weight_decay", "bm",
+    "b1", "b2", "eps"))
+def gwt_adam_fused_q8(g: jax.Array, p: jax.Array, qm: jax.Array,
+                      sm: jax.Array, qv: jax.Array, sv: jax.Array,
+                      salt_m: jax.Array, salt_v: jax.Array,
+                      prev_norm: jax.Array, step_size: jax.Array,
+                      wd_coef: jax.Array, *, level: int, block: int,
+                      gamma: float, use_limiter: bool, weight_decay: bool,
+                      bm: int, b1: float = 0.9, b2: float = 0.999,
+                      eps: float = 1e-6):
+    """q8 fused-write oracle (blocked-int8 moments in/out).  Returns
+    ``(new_p, qm', sm', qv', sv', new_norm)``.
+
+    Same ``lax.scan`` carry structure as :func:`gwt_adam_fused` —
+    ``p``/``qm``/``sm``/``qv``/``sv`` update in-place leaf-by-leaf so
+    donated inputs alias through and one leaf bounds the live temps."""
+    def body(carry, xs):
+        p_c, qm_c, sm_c, qv_c, sv_c = carry
+        gl, saltml, saltvl, pnl, l = xs
+        at = lambda a: jax.lax.dynamic_index_in_dim(a, l, 0, keepdims=False)
+        gt, qm2, sm2, qv2, sv2, _ = gwt_adam_tile_q8(
+            gl, at(qm_c), at(sm_c), at(qv_c), at(sv_c), saltml, saltvl,
+            level=level, block=block, b1=b1, b2=b2, eps=eps)
+        new_p, new_norm = _limit_write(
+            gt, at(p_c), pnl, step_size, wd_coef, gamma=gamma,
+            use_limiter=use_limiter, weight_decay=weight_decay, bm=bm)
+        upd = jax.lax.dynamic_update_index_in_dim
+        return ((upd(p_c, new_p, l, 0), upd(qm_c, qm2, l, 0),
+                 upd(sm_c, sm2, l, 0), upd(qv_c, qv2, l, 0),
+                 upd(sv_c, sv2, l, 0)), new_norm)
+    idx = jnp.arange(g.shape[0], dtype=jnp.int32)
+    (p, qm, sm, qv, sv), norms = jax.lax.scan(
+        body, (p, qm, sm, qv, sv), (g, salt_m, salt_v, prev_norm, idx))
+    return p, qm, sm, qv, sv, norms

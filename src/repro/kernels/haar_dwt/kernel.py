@@ -100,6 +100,37 @@ def haar_dwt_fwd(g: jax.Array, level: int, *, interpret: bool = False
     )(g)
 
 
+def haar_dwt_fwd_q(g: jax.Array, level: int, detail_dtype, *,
+                   interpret: bool = False) -> Tuple[jax.Array, ...]:
+    """Fused DWT + wire quantize: ``(A_l f32, D_l..D_1 detail_dtype)``.
+
+    The wire path's ``reduce_terms`` splits the gradient and narrows the
+    detail bands for the all-reduce.  Staged, that materializes every band
+    in f32 before a second pass re-reads and narrows them; here the cast
+    happens in-register at the tile write (``_fwd_body`` already casts each
+    band to its out-ref dtype), so the f32 detail intermediates never touch
+    HBM — one launch emits the exact wire payload."""
+    m, n = g.shape
+    if n % (1 << level) != 0:
+        raise ValueError(f"n={n} not divisible by 2^{level}")
+    bm, bn = _pick_blocks(m, n, level)
+    grid = (m // bm, n // bn)
+    widths = [n >> level] + [n >> k for k in range(level, 0, -1)]
+    bwidths = [bn >> level] + [bn >> k for k in range(level, 0, -1)]
+    dtypes = [jnp.float32] + [detail_dtype] * level
+    out_shape = [jax.ShapeDtypeStruct((m, w), d)
+                 for w, d in zip(widths, dtypes)]
+    out_specs = [pl.BlockSpec((bm, bw), lambda i, j: (i, j)) for bw in bwidths]
+    return pl.pallas_call(
+        functools.partial(_fwd_body, level),
+        grid=grid,
+        in_specs=[pl.BlockSpec((bm, bn), lambda i, j: (i, j))],
+        out_specs=out_specs,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(g)
+
+
 def haar_dwt_inv(a: jax.Array, details: Sequence[jax.Array], *,
                  interpret: bool = False) -> jax.Array:
     """Inverse: ``(A_l, [D_l..D_1]) -> (m, n)``."""

@@ -11,6 +11,7 @@ import functools
 from typing import Sequence, Tuple
 
 import jax
+import jax.numpy as jnp
 
 from repro import compat
 from repro.kernels.haar_dwt import kernel, ref
@@ -31,6 +32,24 @@ def _dwt(g, level, impl):
     if impl == "interpret":
         return kernel.haar_dwt_fwd(g, level, interpret=True)
     return ref.haar_dwt_fwd(g, level)
+
+
+def dwt_wire(g: jax.Array, level: int, detail_dtype,
+             impl: str = "auto") -> Tuple[jax.Array, ...]:
+    """Fused wire forward for ``distributed.compression.reduce_terms``:
+    one launch emits ``(A_l f32, D_l..D_1 detail_dtype)`` — the detail
+    quantize happens at the tile write instead of a second HBM pass."""
+    return _dwt_wire(g, level, jnp.dtype(detail_dtype),
+                     compat.resolve_kernel_impl(impl))
+
+
+@functools.partial(jax.jit, static_argnames=("level", "detail_dtype", "impl"))
+def _dwt_wire(g, level, detail_dtype, impl):
+    if impl == "pallas":
+        return kernel.haar_dwt_fwd_q(g, level, detail_dtype)
+    if impl == "interpret":
+        return kernel.haar_dwt_fwd_q(g, level, detail_dtype, interpret=True)
+    return ref.haar_dwt_fwd_q(g, level, detail_dtype)
 
 
 def idwt(a: jax.Array, details: Sequence[jax.Array],

@@ -5,6 +5,7 @@ from __future__ import annotations
 from typing import Sequence, Tuple
 
 import jax
+import jax.numpy as jnp
 
 from repro.core import haar
 
@@ -12,6 +13,14 @@ from repro.core import haar
 def haar_dwt_fwd(g: jax.Array, level: int) -> Tuple[jax.Array, ...]:
     a, details = haar.haar_forward(g, level)
     return (a.astype(g.dtype), *(d.astype(g.dtype) for d in details))
+
+
+def haar_dwt_fwd_q(g: jax.Array, level: int, detail_dtype
+                   ) -> Tuple[jax.Array, ...]:
+    """Oracle for the fused quantize+pack forward: f32 transform, f32
+    approximation, detail bands narrowed to ``detail_dtype``."""
+    a, details = haar.haar_forward(g.astype(jnp.float32), level)
+    return (a, *(d.astype(detail_dtype) for d in details))
 
 
 def haar_dwt_inv(a: jax.Array, details: Sequence[jax.Array]) -> jax.Array:

@@ -138,6 +138,18 @@ def main(argv=None):
     ap.add_argument("--page-size", type=int, default=16)
     ap.add_argument("--prefill-chunk", type=int, default=32)
     ap.add_argument("--kv-quant", default=None, choices=[None, "int8"])
+    ap.add_argument("--eos-id", type=int, default=None,
+                    help="retire a request early when it generates this "
+                         "token (default: max_gen-bounded only)")
+    ap.add_argument("--merge-lora", action="store_true",
+                    help="treat --ckpt as a --finetune lora checkpoint: "
+                         "restore {'base','lora'} and serve the merged "
+                         "weights (auto-detected when the checkpoint's "
+                         "run metadata records the fine-tune)")
+    ap.add_argument("--lora-rank", type=int, default=8,
+                    help="adapter rank for --merge-lora on checkpoints "
+                         "without recorded fine-tune metadata")
+    ap.add_argument("--lora-alpha", type=float, default=16.0)
     ap.add_argument("--static", action="store_true",
                     help="static-wave admission (the benchmark baseline)")
     ap.add_argument("--seed", type=int, default=0)
@@ -158,9 +170,12 @@ def main(argv=None):
     ecfg = EngineConfig(num_slots=args.num_slots, page_size=args.page_size,
                         max_ctx=args.prompt_len + args.gen,
                         prefill_chunk=args.prefill_chunk,
-                        kv_quant=args.kv_quant)
+                        kv_quant=args.kv_quant, eos_id=args.eos_id)
     if args.ckpt:
-        eng = Engine.from_checkpoint(cfg, args.ckpt, ecfg, ctx=ctx)
+        eng = Engine.from_checkpoint(
+            cfg, args.ckpt, ecfg, ctx=ctx,
+            merge_lora=True if args.merge_lora else None,
+            lora_rank=args.lora_rank, lora_alpha=args.lora_alpha)
     else:
         eng = Engine(cfg, lm.init(cfg, jax.random.key(args.seed)), ecfg,
                      ctx=ctx)

@@ -316,9 +316,13 @@ def main(argv=None):
                                          accum_steps=args.accum,
                                          ctx=ctx, dp_reduce=dp_spec,
                                          shardings=shardings)
-    ckpt = CheckpointManager(args.ckpt_dir,
-                             run_meta={"data": data_meta,
-                                       "state_codec": args.state_codec}) \
+    run_meta = {"data": data_meta, "state_codec": args.state_codec}
+    if finetune_lora:
+        # serving reads this to auto-merge the adapters back into the
+        # base weights (Engine.from_checkpoint / serve --merge-lora)
+        run_meta["finetune"] = {"mode": "lora", "rank": args.lora_rank,
+                                "alpha": args.lora_alpha}
+    ckpt = CheckpointManager(args.ckpt_dir, run_meta=run_meta) \
         if args.ckpt_dir else None
     start = 0
     if args.resume and ckpt is not None and ckpt.latest_step() is not None:

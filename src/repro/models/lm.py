@@ -501,6 +501,11 @@ def make_sharded_train_step(cfg, optimizer, loss, *, ctx: MeshContext,
     # inside the manual region every sharding constraint must be a no-op:
     # hand the forward a mesh-less context instead of letting wsc degrade
     inner_ctx = MeshContext(mesh=None, kernel_impl=ctx.kernel_impl)
+    # wavelet split of the wire reduction follows the session's kernel
+    # backend: pallas/interpret fuses the detail quantize into the DWT
+    # launch (compression.reduce_terms impl kwarg)
+    from repro import compat
+    wire_impl = compat.resolve_kernel_impl(ctx.kernel_impl or "auto")
 
     def batch_spec(k: str, v) -> jax.sharding.PartitionSpec:
         bdim = 1 if k == "mrope_positions" else 0
@@ -527,13 +532,14 @@ def make_sharded_train_step(cfg, optimizer, loss, *, ctx: MeshContext,
             grads = jax.tree.map(
                 functools.partial(compression.compressed_psum_mean,
                                   axis_name=axis, level=dp_reduce.level,
-                                  detail_dtype=dp_reduce.detail_dtype), gmean)
+                                  detail_dtype=dp_reduce.detail_dtype,
+                                  impl=wire_impl), gmean)
             return grads, lmean
         g_leaves, treedef = jax.tree.flatten(gmean)
         e_leaves = treedef.flatten_up_to(ef)
         pairs = [compression.compressed_psum_mean_ef(
             g, e[0], axis_name=axis, level=dp_reduce.level,
-            detail_dtype=dp_reduce.detail_dtype)
+            detail_dtype=dp_reduce.detail_dtype, impl=wire_impl)
             for g, e in zip(g_leaves, e_leaves)]
         grads = jax.tree_util.tree_unflatten(treedef,
                                              [p[0] for p in pairs])

@@ -29,9 +29,12 @@ persistent footprint is one arena regardless of how long the engine
 runs.  The engine rebinds ``self.pools`` after every call — donated
 buffers must never be reused.
 
-Greedy decoding only, ``max_gen``-bounded (no EOS logic): the engine
-exists to exercise and measure the serving *runtime* — scheduling, page
-accounting, cache quantization — not sampling strategies.
+Greedy decoding only: the engine exists to exercise and measure the
+serving *runtime* — scheduling, page accounting, cache quantization —
+not sampling strategies.  A request retires when it hits its ``max_gen``
+bound, emits ``EngineConfig.eos_id``, or its generation ends with any of
+``EngineConfig.stop_seqs`` — retirement frees the slot's pages
+immediately, so a queued request can be admitted the very next tick.
 """
 
 from __future__ import annotations
@@ -73,6 +76,8 @@ class EngineConfig:
     prefill_chunk: int = 32
     kv_quant: Optional[str] = None      # None | "int8"
     num_pages: Optional[int] = None     # default: every slot can fill up
+    eos_id: Optional[int] = None        # retire the slot on this token
+    stop_seqs: Sequence[Sequence[int]] = ()   # ...or on any of these tails
 
     @property
     def max_pages(self) -> int:
@@ -147,13 +152,38 @@ class Engine:
     @classmethod
     def from_checkpoint(cls, cfg, ckpt_dir: str,
                         ecfg: Optional[EngineConfig] = None,
-                        step: Optional[int] = None, ctx=None) -> "Engine":
+                        step: Optional[int] = None, ctx=None,
+                        merge_lora: Optional[bool] = None,
+                        lora_rank: int = 8,
+                        lora_alpha: float = 16.0) -> "Engine":
         """Build an engine straight from a training checkpoint directory,
         loading only the params leaves (the optimizer state never touches
-        host memory — ``CheckpointManager.restore_params``)."""
+        host memory — ``CheckpointManager.restore_params``).
+
+        Fine-tuned checkpoints hold a ``{"base", "lora"}`` tree instead of
+        plain params; the engine's forward knows nothing about adapters,
+        so they are merged into the base weights at load
+        (:func:`repro.models.lora.merge`).  ``merge_lora=None``
+        auto-detects from the checkpoint's run metadata (``--finetune
+        lora`` runs stamp rank/alpha there); pass ``True`` with
+        ``lora_rank``/``lora_alpha`` for checkpoints written without it."""
         from repro.checkpoint.manager import CheckpointManager
-        params, _ = CheckpointManager(ckpt_dir).restore_params(
-            step, lm.abstract_params(cfg), ctx=ctx)
+        mgr = CheckpointManager(ckpt_dir)
+        ft = mgr.saved_run(step).get("finetune") or {}
+        if merge_lora is None:
+            merge_lora = ft.get("mode") == "lora"
+        if merge_lora:
+            from repro.models import lora
+            rank = int(ft.get("rank", lora_rank))
+            alpha = float(ft.get("alpha", lora_alpha))
+            like = jax.eval_shape(
+                lambda p: lora.inject(p, rank, jax.random.key(0)),
+                lm.abstract_params(cfg))
+            tree, _ = mgr.restore_params(step, like, ctx=ctx)
+            params = lora.merge(tree, alpha, rank)
+        else:
+            params, _ = mgr.restore_params(
+                step, lm.abstract_params(cfg), ctx=ctx)
         return cls(cfg, params, ecfg, ctx=ctx)
 
     def warmup(self):
@@ -200,6 +230,20 @@ class Engine:
                 break   # page pressure: keep FIFO order, wait for retires
             pending.popleft()
 
+    def _finished(self, req: Request) -> bool:
+        """max_gen bound, EOS token, or a stop-sequence tail — checked
+        after every appended token (prefill's first token included), so a
+        stopped slot frees its pages before the next admit pass."""
+        if len(req.generated) >= req.max_gen:
+            return True
+        e = self.ecfg
+        if e.eos_id is not None and req.generated \
+                and req.generated[-1] == e.eos_id:
+            return True
+        return any(stop and len(req.generated) >= len(stop)
+                   and req.generated[-len(stop):] == list(stop)
+                   for stop in e.stop_seqs)
+
     def _retire(self, slot: int, now: float):
         s = self.slots[slot]
         self.free_pages.extend(sorted(s["pages"], reverse=True))
@@ -231,7 +275,7 @@ class Engine:
             req.generated.append(g0)
             req.t_first = now()
             self.lens[slot] = plen
-            if len(req.generated) >= req.max_gen:
+            if self._finished(req):
                 self._retire(slot, now())
             else:
                 s.update(state=DECODE, last=g0)
@@ -262,7 +306,7 @@ class Engine:
             tok = int(nxt[i])
             s["req"].generated.append(tok)
             s["last"] = tok
-            if len(s["req"].generated) >= s["req"].max_gen:
+            if self._finished(s["req"]):
                 self._retire(i, now())
         return True
 

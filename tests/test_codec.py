@@ -209,6 +209,70 @@ def test_gwt_fused_q8_3d_leaf_matches_generic_wrap():
         np.asarray(a), np.asarray(b), atol=1e-4), p_j, p_f)
 
 
+@pytest.mark.parametrize("level,shape", [
+    (1, (16, 64)), (2, (16, 64)), (4, (16, 64)),   # LAST orientation
+    (2, (32, 7)),                                  # FIRST orientation
+])
+def test_gwt_fused_q8_level_orientation_sweep(level, shape):
+    """Megakernel parity tier × int8 codec: the fused dequant→update→
+    requant epilogue matches the generic codec wrap across transform
+    levels and both orientations, with the same ≤1-quantum comparator as
+    the q8 wrap tier.  Pinned to ``interpret`` so it runs by default."""
+    k = jax.random.key(17)
+    params = {"blk": {"mlp": {
+        "w1": jax.random.normal(k, shape) * 0.1,
+        "w2": jax.random.normal(jax.random.fold_in(k, 1), shape) * 0.1}}}
+    p_j, st_j = run_steps(optim.make("gwt", lr=0.01, level=level,
+                                     impl="jnp", state_codec="int8"),
+                          params)
+    p_f, st_f = run_steps(optim.make("gwt", lr=0.01, level=level,
+                                     impl="interpret", state_codec="int8"),
+                          params)
+
+    def close(a, b):
+        a, b = np.asarray(a), np.asarray(b)
+        if a.dtype == np.int8:
+            assert np.abs(a.astype(np.int32) - b.astype(np.int32)).max() <= 1
+        else:
+            np.testing.assert_allclose(a.astype(np.float32),
+                                       b.astype(np.float32), rtol=1e-5,
+                                       atol=1e-5)
+    jax.tree.map(close, st_j, st_f)
+    jax.tree.map(lambda a, b: np.testing.assert_allclose(
+        np.asarray(a), np.asarray(b), atol=1e-4), p_j, p_f)
+
+
+def test_gwt_fused_q8_nontileable_shape_uses_oracle():
+    """A bucket whose flattened A-band (m·n_A = 48) is not a codec-block
+    multiple cannot tile block-aligned — the ops layer must route it to
+    the jnp oracle under fused impls instead of launching a kernel that
+    would straddle scale blocks across row tiles.  The engine result must
+    stay finite and match the generic wrap."""
+    from repro.kernels.gwt_adam import kernel as kg
+    assert kg.q8_row_block(12, 8, 1, 64) is None
+    params = {"blk": {"w": jax.random.normal(jax.random.key(23),
+                                             (12, 8)) * 0.1}}
+    p_j, st_j = run_steps(optim.make("gwt", lr=0.01, level=1,
+                                     impl="jnp", state_codec="int8"),
+                          params)
+    p_f, st_f = run_steps(optim.make("gwt", lr=0.01, level=1,
+                                     impl="interpret", state_codec="int8"),
+                          params)
+    assert np.isfinite(np.asarray(p_f["blk"]["w"], np.float32)).all()
+
+    def close(a, b):
+        a, b = np.asarray(a), np.asarray(b)
+        if a.dtype == np.int8:
+            assert np.abs(a.astype(np.int32) - b.astype(np.int32)).max() <= 1
+        else:
+            np.testing.assert_allclose(a.astype(np.float32),
+                                       b.astype(np.float32), rtol=1e-5,
+                                       atol=1e-5)
+    jax.tree.map(close, st_j, st_f)
+    jax.tree.map(lambda a, b: np.testing.assert_allclose(
+        np.asarray(a), np.asarray(b), atol=1e-4), p_j, p_f)
+
+
 def test_codec_key_advances_rounding_per_step():
     """Salts fold in the step: the same moment value requantized at two
     different steps draws different rounding bits (no frozen bias)."""

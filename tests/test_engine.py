@@ -237,6 +237,36 @@ def test_bucketed_gwt_backend_sweep(kernel_impl):
                                    rtol=1e-4, atol=1e-5)
 
 
+@pytest.mark.parametrize("level", [1, 2, 4])
+@pytest.mark.parametrize("orient", ["last", "first"])
+def test_fused_write_level_orientation_sweep(level, orient):
+    """Megakernel parity tier, optimizer level: the fused-write path
+    (interpret) matches the staged per-leaf jnp engine across transform
+    levels and both orientations.  FIRST-orient leaves ((32, 7): last
+    axis indivisible) exercise the swap-in/swap-out of both g and p
+    around the fused write; tolerance matches the existing GWT tier —
+    the two paths schedule the Haar butterfly differently."""
+    shape = (16, 64) if orient == "last" else (32, 7)
+    k = jax.random.key(41)
+    params = {"blk": {"mlp": {
+        "w1": jax.random.normal(k, shape) * 0.1,
+        "w2": jax.random.normal(jax.random.fold_in(k, 1), shape) * 0.1}}}
+    pf, sf = run_steps(optim.make("gwt", lr=0.01, level=level,
+                                  impl="interpret"), params)
+    pj, sj = run_steps(optim.make("gwt", lr=0.01, level=level,
+                                  impl="jnp"), params)
+    bucket = f"gwt_{orient}__blk.mlp.w1"
+    assert bucket in sf["buckets"], list(sf["buckets"])
+    assert sf["buckets"][bucket]["host"]["m"].shape[0] == 2  # stacked pair
+    for a, b in zip(jax.tree.leaves(pf), jax.tree.leaves(pj)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-6, atol=1e-6)
+    for a, b in zip(jax.tree.leaves(sf), jax.tree.leaves(sj)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=1e-6, atol=1e-6)
+
+
 def test_state_sharding_hint_structure_mismatch_raises():
     """A per-bucket placement hint whose structure drifted from the bucket
     state (wrong dict level, stale optimizer config) must fail loudly at

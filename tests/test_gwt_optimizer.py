@@ -95,6 +95,23 @@ def test_norm_growth_limiter():
     np.testing.assert_allclose(lim3, small)
 
 
+def test_norm_growth_limiter_zero_update_keeps_prev():
+    """An all-zero update (frozen leaf, masked step) must NOT reset the
+    norm history: prev_norm carries through, so the next real update is
+    still limited against the established trajectory instead of sailing
+    through an accidentally-cleared limiter."""
+    u1 = jnp.ones((4, 4))
+    _, n1 = limiter.limit(u1, jnp.zeros(()))
+    assert float(n1) > 0
+    lim0, n0 = limiter.limit(jnp.zeros((4, 4)), n1, gamma=1.01)
+    np.testing.assert_allclose(np.asarray(lim0), 0.0)
+    assert float(n0) == float(n1)       # history preserved, not zeroed
+    big = jnp.ones((4, 4)) * 100.0
+    lim2, _ = limiter.limit(big, n0, gamma=1.01)
+    np.testing.assert_allclose(float(jnp.linalg.norm(lim2)),
+                               1.01 * float(n1), rtol=1e-5)
+
+
 def test_gwt_spike_suppression():
     """NL keeps the update norm trajectory within gamma^t growth."""
     params = {"m": {"w": jnp.zeros((8, 16))}}

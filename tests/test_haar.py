@@ -161,6 +161,23 @@ def test_db2_smoother_on_smooth_signals():
     assert frac_d >= frac_h - 1e-3, (frac_h, frac_d)
 
 
+@pytest.mark.parametrize("fwd,inv", [
+    (haar.haar_forward, haar.haar_inverse),
+    (haar.db2_forward, haar.db2_inverse),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_forward_preserves_dtype_both_wavelets(fwd, inv, dtype):
+    """A bf16 ``state_dtype`` host must see the same band dtypes under
+    either wavelet: db2 historically upcast to f32 (f32 taps + an explicit
+    astype) while Haar stayed in the input dtype, so switching wavelets
+    silently doubled the moment footprint."""
+    g = rand(11, (8, 64)).astype(dtype)
+    a, ds = fwd(g, 2)
+    assert a.dtype == dtype, (fwd.__name__, a.dtype)
+    assert all(d.dtype == dtype for d in ds)
+    assert inv(a, ds).dtype == dtype
+
+
 def test_gwt_db2_optimizer_trains():
     import jax as _jax
     from repro import optim

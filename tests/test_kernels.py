@@ -71,6 +71,187 @@ def test_fused_update_stacked_leaves():
     assert float(lm1) == pytest.approx(float(lm2))
 
 
+# ---------------------------------------------------------------------------
+# Fused-write (megakernel) parity tier: one launch per bucket performs
+# DWT→Adam→inverse→limit→param-write.  impl='jnp' routes to the tiled ref
+# oracle whose norm reduction replicates the kernel's row-block
+# association, so the whole staged core — moments, requantized q8 state,
+# and the two-pass limiter norms — is BITWISE identical under interpret.
+# Only the terminal write chain ``p - step·g̃`` may diverge: the
+# interpret and jnp lowerings make independent FMA-contraction choices
+# there, so new_p is pinned to a contraction error bound — elementwise
+# |Δ| ≤ a few spacings of the operand magnitude — instead of equality.
+# ---------------------------------------------------------------------------
+
+FUSED_WRITE_SHAPES = [(1, 16, 128, 1), (3, 24, 64, 2), (2, 32, 512, 4)]
+
+
+def _assert_write_parity(a, b, p_in, slack=4):
+    """new_p from two lowerings of the same write chain
+    (``p - step·(g̃·coef) [- wd·p]``): each multiply/subtract is an FMA
+    candidate the two backends contract independently, so the elementwise
+    difference is a handful of rounding errors at the magnitude of the
+    chain's operands (measured worst: 2.5 spacings at level 4; asserted
+    ≤ ``slack`` spacings of the largest of |a|,|b|,|p_in|)."""
+    a = np.asarray(a, np.float32)
+    b = np.asarray(b, np.float32)
+    mag = np.maximum(np.maximum(np.abs(a), np.abs(b)),
+                     np.abs(np.asarray(p_in, np.float32)))
+    tol = slack * np.spacing(mag.astype(np.float32))
+    diff = np.abs(a - b)
+    bad = diff > tol
+    assert not bad.any(), (int(bad.sum()), float(diff[bad].max()))
+
+
+def _fused_write_inputs(L, m, n, level, dtype=jnp.float32):
+    k = jax.random.key(6)
+    g = jax.random.normal(k, (L, m, n), dtype)
+    p = jax.random.normal(jax.random.fold_in(k, 1), (L, m, n), dtype)
+    st = {"m": jnp.abs(jax.random.normal(jax.random.fold_in(k, 2),
+                                         (L, m, n >> level))) * 0.1,
+          "v": jnp.abs(jax.random.normal(jax.random.fold_in(k, 3),
+                                         (L, m, n >> level))) * 0.01}
+    # leaf 0 enters with prev_norm == 0 (first-step limiter case)
+    pn = jnp.arange(L, dtype=jnp.float32) * 0.3
+    return g, p, st, pn
+
+
+def _fused_write_kw(level, **over):
+    kw = dict(lr_t=jnp.float32(0.01), alpha=0.25, weight_decay=0.0,
+              gamma=1.01, use_limiter=True, level=level)
+    kw.update(over)
+    return kw
+
+
+@pytest.mark.parametrize("L,m,n,level", FUSED_WRITE_SHAPES)
+@pytest.mark.parametrize("use_limiter", [True, False])
+def test_fused_write_core_bitwise_vs_staged_oracle(L, m, n, level,
+                                                   use_limiter):
+    g, p, st, pn = _fused_write_inputs(L, m, n, level)
+    kw = _fused_write_kw(level, use_limiter=use_limiter)
+    pi, ni, si = gops.fused_write_update(g, p, st, jnp.int32(2), pn,
+                                         impl="interpret", **kw)
+    pj, nj, sj = gops.fused_write_update(g, p, st, jnp.int32(2), pn,
+                                         impl="jnp", **kw)
+    for tag, a, b in [("norm", ni, nj),
+                      ("m", si["m"], sj["m"]), ("v", si["v"], sj["v"])]:
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                      err_msg=tag)
+    _assert_write_parity(pi, pj, p)
+
+
+def test_fused_write_bf16_params_vs_staged_oracle():
+    """bf16 grads/params (f32 moments): the fused write rounds new_p to
+    bf16 exactly once, same as the staged oracle — ≤1 bf16 ulp, bitwise
+    in practice for weight_decay == 0."""
+    g, p, st, pn = _fused_write_inputs(2, 16, 256, 2, dtype=jnp.bfloat16)
+    kw = _fused_write_kw(2)
+    pi, ni, si = gops.fused_write_update(g, p, st, jnp.int32(1), pn,
+                                         impl="interpret", **kw)
+    pj, nj, sj = gops.fused_write_update(g, p, st, jnp.int32(1), pn,
+                                         impl="jnp", **kw)
+    assert pi.dtype == jnp.bfloat16
+    bits_i = np.asarray(pi).view(np.uint16).astype(np.int32)
+    bits_j = np.asarray(pj).view(np.uint16).astype(np.int32)
+    assert np.abs(bits_i - bits_j).max() <= 1
+    np.testing.assert_array_equal(np.asarray(ni), np.asarray(nj))
+    np.testing.assert_array_equal(np.asarray(si["m"]), np.asarray(sj["m"]))
+    np.testing.assert_array_equal(np.asarray(si["v"]), np.asarray(sj["v"]))
+
+
+def test_fused_write_weight_decay_within_fma_bound():
+    """weight_decay != 0 adds one more FMA opportunity to the write chain
+    (the decoupled ``- wd_coef·p`` term): new_p stays within the same
+    contraction bound; everything upstream of the write stays bitwise."""
+    g, p, st, pn = _fused_write_inputs(2, 32, 512, 4)
+    kw = _fused_write_kw(4, weight_decay=0.01)
+    pi, ni, si = gops.fused_write_update(g, p, st, jnp.int32(2), pn,
+                                         impl="interpret", **kw)
+    pj, nj, sj = gops.fused_write_update(g, p, st, jnp.int32(2), pn,
+                                         impl="jnp", **kw)
+    _assert_write_parity(pi, pj, p)
+    np.testing.assert_array_equal(np.asarray(ni), np.asarray(nj))
+    np.testing.assert_array_equal(np.asarray(si["m"]), np.asarray(sj["m"]))
+    np.testing.assert_array_equal(np.asarray(si["v"]), np.asarray(sj["v"]))
+
+
+def _q8_encoded_state(L, m, na, block=64, seed=9):
+    from repro.optim import codec
+    k = jax.random.key(seed)
+    key = codec.make_key(0)
+    leaf_ids = jnp.arange(L, dtype=jnp.uint32)
+    step0 = jnp.uint32(0)
+    mf = jnp.abs(jax.random.normal(jax.random.fold_in(k, 4),
+                                   (L, m, na))) * 0.1
+    vf = jnp.abs(jax.random.normal(jax.random.fold_in(k, 5),
+                                   (L, m, na))) * 0.01
+    enc = {"m": {"q": [], "scale": []}, "v": {"q": [], "scale": []}}
+    for slot, src in ((0, mf), (1, vf)):
+        name = "m" if slot == 0 else "v"
+        for l in range(L):
+            salt = codec.slot_salt(key, step0, slot, leaf_ids[l])
+            q, s = codec.blocked_quant(src[l], salt, block)
+            enc[name]["q"].append(q)
+            enc[name]["scale"].append(s)
+    st = {n: {"q": jnp.stack(enc[n]["q"]),
+              "scale": jnp.stack(enc[n]["scale"])} for n in ("m", "v")}
+    return st, key, leaf_ids
+
+
+def test_fused_write_q8_bitwise_vs_staged_oracle():
+    """int8-codec megakernel: dequant→update→requant AND limit+write in
+    one launch.  The requantize is a pure function of (salt, flat index),
+    so the int8 payloads and scales are bitwise vs the tiled oracle; the
+    param write carries the usual single-FMA contraction bound."""
+    L, m, n, level = 2, 16, 256, 2
+    g, p, _, pn = _fused_write_inputs(L, m, n, level)
+    st, key, leaf_ids = _q8_encoded_state(L, m, n >> level)
+    kw = _fused_write_kw(level)
+    pi, ni, si = gops.fused_write_update_q8(
+        g, p, st, jnp.int32(1), key, leaf_ids, pn, impl="interpret", **kw)
+    pj, nj, sj = gops.fused_write_update_q8(
+        g, p, st, jnp.int32(1), key, leaf_ids, pn, impl="jnp", **kw)
+    _assert_write_parity(pi, pj, p)
+    np.testing.assert_array_equal(np.asarray(ni), np.asarray(nj))
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+        np.asarray(a), np.asarray(b)), si, sj)
+
+
+def test_fused_write_q8_nontileable_falls_back_to_oracle():
+    """Shapes the q8 kernel cannot tile block-aligned (m·n_A not a
+    multiple of the codec block) fall back to the jnp oracle under any
+    impl — a static per-bucket decision, bitwise across backends."""
+    L, m, n, level = 1, 12, 8, 1
+    assert kg.q8_row_block(m, n, level, 64) is None
+    g, p, _, pn = _fused_write_inputs(L, m, n, level)
+    st, key, leaf_ids = _q8_encoded_state(L, m, n >> level)
+    kw = _fused_write_kw(level)
+    pi, ni, si = gops.fused_write_update_q8(
+        g, p, st, jnp.int32(1), key, leaf_ids, pn, impl="interpret", **kw)
+    pj, nj, sj = gops.fused_write_update_q8(
+        g, p, st, jnp.int32(1), key, leaf_ids, pn, impl="jnp", **kw)
+    assert np.isfinite(np.asarray(pi)).all()
+    np.testing.assert_array_equal(np.asarray(pi), np.asarray(pj))
+    np.testing.assert_array_equal(np.asarray(ni), np.asarray(nj))
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+        np.asarray(a), np.asarray(b)), si, sj)
+
+
+def test_wire_dwt_quantize_pack_bitwise_vs_jnp():
+    """The wire-path sibling fusion: haar_dwt_fwd_q emits (A f32,
+    D bf16/f8) in one launch, bitwise vs the jnp reduce_terms split."""
+    from repro.kernels.haar_dwt import ops as dops
+    g = jax.random.normal(jax.random.key(12), (24, 256), jnp.float32)
+    for dt in (jnp.bfloat16, jnp.float8_e4m3fn):
+        bk = dops.dwt_wire(g, 2, dt, impl="interpret")
+        br = dops.dwt_wire(g, 2, dt, impl="jnp")
+        assert bk[0].dtype == jnp.float32
+        assert all(d.dtype == dt for d in bk[1:])
+        for a, b in zip(bk, br):
+            np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                          np.asarray(b, np.float32))
+
+
 def test_block_picker_constraints():
     for (m, n, level) in [(8, 128, 1), (1024, 4096, 3), (333, 768, 2)]:
         bm, bn = kg._pick_blocks(m, n, level)

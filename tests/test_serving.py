@@ -194,6 +194,84 @@ def test_engine_int8_kv_greedy_close_to_f32():
     assert match / total >= 0.9, (match, total, outs)
 
 
+def _truncate(ref, eos_id=None, stop_seqs=()):
+    """Expected engine output: dense greedy tokens cut at the first EOS /
+    stop-sequence tail (inclusive), else the full max_gen run."""
+    out = []
+    for t in ref:
+        out.append(t)
+        if eos_id is not None and t == eos_id:
+            break
+        if any(stop and len(out) >= len(stop)
+               and out[-len(stop):] == list(stop) for stop in stop_seqs):
+            break
+    return out
+
+
+def test_engine_eos_retires_slot_and_admits_queue():
+    """A request that emits eos_id retires early — its pages free up and
+    the next queued request is admitted into the single slot; both outputs
+    match the dense greedy path truncated at EOS."""
+    cfg = _smoke()
+    params = _params(cfg)
+    reqs = _requests(cfg, 3, seed=7, max_prompt=16, max_gen=8)
+    refs = [generate(cfg, params, jnp.asarray([r.prompt], jnp.int32),
+                     r.max_gen)[0].tolist() for r in reqs]
+    # an EOS the first request emits mid-generation, so the early retire
+    # actually happens (not just the max_gen bound)
+    long0 = next(ref for ref in refs if len(ref) >= 4)
+    eos = long0[len(long0) // 2]
+    eng = Engine(cfg, params,
+                 EngineConfig(num_slots=1, page_size=4, max_ctx=32,
+                              prefill_chunk=8, eos_id=eos))
+    eng.run(reqs)
+    truncated_any = False
+    for r, ref in zip(reqs, refs):
+        want = _truncate(ref, eos_id=eos)
+        assert r.generated == want, (r.rid, r.generated, want)
+        truncated_any |= len(want) < len(ref)
+        assert r.t_done >= 0    # every queued request was served
+    assert truncated_any
+    # retirement returned every page (stopped slots leak nothing)
+    assert sorted(eng.free_pages) == list(range(1, eng.num_pages))
+    # single slot: the queue only drains through retirement
+    order = sorted(reqs, key=lambda r: r.t_admit)
+    for a, b in zip(order, order[1:]):
+        assert b.t_admit >= a.t_done - 1e-6
+
+
+def test_engine_eos_on_first_token_retires_from_prefill():
+    """EOS as the very first generated token: the slot retires straight
+    from PREFILL without ever entering DECODE."""
+    cfg = _smoke()
+    params = _params(cfg)
+    req = Request(rid=0, prompt=list(range(3, 13)), max_gen=6)
+    ref = generate(cfg, params, jnp.asarray([req.prompt], jnp.int32),
+                   6)[0].tolist()
+    eng = Engine(cfg, params,
+                 EngineConfig(num_slots=2, page_size=4, max_ctx=24,
+                              prefill_chunk=8, eos_id=ref[0]))
+    eng.run([req])
+    assert req.generated == [ref[0]]
+    assert sorted(eng.free_pages) == list(range(1, eng.num_pages))
+
+
+def test_engine_stop_sequence_retires():
+    cfg = _smoke()
+    params = _params(cfg)
+    req = Request(rid=0, prompt=list(range(5, 17)), max_gen=8)
+    ref = generate(cfg, params, jnp.asarray([req.prompt], jnp.int32),
+                   8)[0].tolist()
+    stop = tuple(ref[2:4])      # tail hit after the 4th token
+    eng = Engine(cfg, params,
+                 EngineConfig(num_slots=2, page_size=4, max_ctx=32,
+                              prefill_chunk=8, stop_seqs=(stop,)))
+    eng.run([req])
+    want = _truncate(ref, stop_seqs=(stop,))
+    assert req.generated == want and len(want) <= 4
+    assert sorted(eng.free_pages) == list(range(1, eng.num_pages))
+
+
 def test_engine_rejects_unsupported_archs():
     for arch in ("gemma2-9b",      # sliding-window ring buffer
                  "xlstm-350m"):    # recurrent mixer
@@ -283,3 +361,66 @@ def test_train_checkpoint_serve_roundtrip(tmp_path, codec):
     eng.run([req])
     ref = generate(cfg, restored, tokens, 5)[0].tolist()
     assert req.generated == ref
+
+
+def test_pretrain_finetune_serve_roundtrip(tmp_path):
+    """Full fine-tune loop: pretrain → LoRA fine-tune (the checkpoint
+    holds a {'base','lora'} tree) → serve.  The engine auto-detects the
+    fine-tune from the checkpoint's run metadata, merges the adapters at
+    load, and its greedy output equals dense generate on merged weights;
+    explicit merge_lora=True covers checkpoints without the metadata."""
+    from repro.models import lora
+    RANK, ALPHA = 4, 8.0
+    cfg = _smoke()
+    params = _params(cfg, seed=8)
+    data = SyntheticLM(cfg.vocab, 16, 2, seed=13)
+
+    # pretrain a couple of steps, then fine-tune adapters on the result
+    opt = optim.make("adam", lr=1e-2)
+    step_fn = jax.jit(lm.make_train_step(cfg, opt))
+    ostate = opt.init(params)
+    for i in range(2):
+        params, ostate, _ = step_fn(params, ostate, data.batch(i))
+
+    tree = lora.inject(params, RANK, jax.random.key(3))
+    fopt = lora.wrap_optimizer(optim.make("gwt", lr=1e-2, level=2))
+    fstate = fopt.init(tree)
+    ft_step = jax.jit(lora.make_train_step(lm, cfg, fopt,
+                                           rank=RANK, alpha=ALPHA))
+    for i in range(3):
+        tree, fstate, _ = ft_step(tree, fstate, data.batch(10 + i))
+    # adapters actually moved: the merged model differs from the base
+    merged = lora.merge(tree, ALPHA, RANK)
+    assert any(not np.array_equal(np.asarray(a), np.asarray(b))
+               for a, b in zip(jax.tree.leaves(merged),
+                               jax.tree.leaves(params)))
+
+    cm = CheckpointManager(
+        str(tmp_path), run_meta={"finetune": {"mode": "lora", "rank": RANK,
+                                              "alpha": ALPHA}})
+    cm.save(3, {"opt": fstate, "params": tree}, blocking=True)
+
+    tokens = data.batch(20)["tokens"][:1, :12]
+    ref = generate(cfg, merged, tokens, 5)[0].tolist()
+    ecfg = EngineConfig(num_slots=2, page_size=4, max_ctx=24,
+                        prefill_chunk=8)
+    # (a) auto-detected from run metadata
+    eng = Engine.from_checkpoint(cfg, str(tmp_path), ecfg)
+    for a, b in zip(jax.tree.leaves(merged), jax.tree.leaves(eng.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    req = Request(rid=0, prompt=tokens[0].tolist(), max_gen=5)
+    eng.run([req])
+    assert req.generated == ref
+    # (b) explicit merge on a metadata-less checkpoint
+    cm2 = CheckpointManager(str(tmp_path / "bare"))
+    cm2.save(3, {"opt": fstate, "params": tree}, blocking=True)
+    eng2 = Engine.from_checkpoint(cfg, str(tmp_path / "bare"), ecfg,
+                                  merge_lora=True, lora_rank=RANK,
+                                  lora_alpha=ALPHA)
+    req2 = Request(rid=1, prompt=tokens[0].tolist(), max_gen=5)
+    eng2.run([req2])
+    assert req2.generated == ref
+    # (c) a plain checkpoint must NOT be disturbed by the new path
+    with pytest.raises(StructureMismatch):
+        Engine.from_checkpoint(cfg, str(tmp_path / "bare"), ecfg,
+                               merge_lora=False)
