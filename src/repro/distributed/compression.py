@@ -108,10 +108,13 @@ def reduce_terms(g: jax.Array, level: int, detail_dtype, impl: str = "jnp"
     ``impl`` pallas/interpret routes the split through the fused
     quantize+pack Pallas kernel (``haar_dwt.ops.dwt_wire``): the detail
     cast happens at the tile write, so the f32 detail intermediates never
-    materialize in HBM.  The butterfly is elementwise — no reductions —
+    materialize in HBM.  ``auto``/``None`` resolve per platform via
+    ``compat.resolve_kernel_impl`` (pallas on TPU), matching every other
+    kernel entry point.  The butterfly is elementwise — no reductions —
     so the kernel's terms are bitwise the jnp ones regardless of tiling
     (pinned by tests/test_kernels.py)."""
-    if impl not in ("jnp", "auto", None):
+    impl = compat.resolve_kernel_impl(impl)
+    if impl != "jnp":
         from repro.kernels.haar_dwt import ops as dwt_ops
         lead = g.shape[:-1]
         flat = g.astype(jnp.float32).reshape(-1, g.shape[-1])

@@ -290,10 +290,12 @@ def gwt_adam_tile(g: jax.Array, m_st: jax.Array, v_st: jax.Array, *,
 def fused_row_block(m: int, n: int, level: int) -> int:
     """Row-tile height for the fused-write kernels: full-width stripes so
     the per-leaf ssq accumulation sees one tile per grid step.  Working set
-    ≈ (G + P + G̃ + P' + M,V in/out) ≈ 6·bm·n·4B; cap ~4MB."""
+    ≈ (G + P + G̃ + P' at width n, M,V in/out at width n>>level)
+    ≈ (4 + 4/2^level)·bm·n·4B; cap ~4MB."""
+    row_bytes = (4 + 4 / (1 << level)) * n * 4
     bm = 8 if m % 8 == 0 else m
     while bm * 2 <= min(m, 1024) and m % (bm * 2) == 0 \
-            and 6 * (bm * 2) * n * 4 <= 4 * 1024 * 1024:
+            and (bm * 2) * row_bytes <= 4 * 1024 * 1024:
         bm *= 2
     return bm
 
@@ -350,6 +352,15 @@ def _body_fused(level: int, b1: float, b2: float, eps: float, gamma: float,
     def _():
         acc = jnp.where(i == 0, jnp.float32(0.0), norm_ref[0, 0])
         norm_ref[0, 0] = acc + part
+        # On hardware, every output window a grid step maps is copied back
+        # to HBM when the step ends, written or not — and p/m/v alias
+        # their inputs, so leaving them unwritten here would clobber the
+        # state phase 1 re-reads with undefined VMEM.  Pass the inputs
+        # through unmodified (interpret mode masks this; the TPU parity
+        # test below pins it).
+        p_out_ref[0] = p_ref[0]
+        m_out_ref[0] = m_ref[0]
+        v_out_ref[0] = v_ref[0]
 
     @pl.when(phase == 1)
     def _():
@@ -404,8 +415,9 @@ def gwt_adam_tile_fused(g: jax.Array, p: jax.Array, m_st: jax.Array,
             jax.ShapeDtypeStruct((L, 1), jnp.float32),
         ],
         # in-place write semantics: p/m/v are updated in their own
-        # buffers (each phase-1 tile reads its block before writing it,
-        # and phase 0 never touches p).  NOT prev_norm→new_norm: phase 0
+        # buffers (each tile reads its block before writing it; phase 0
+        # writes the inputs through unchanged).  NOT prev_norm→new_norm:
+        # phase 0
         # accumulates ssq into the norm output while phase 1 still reads
         # the history from pn_ref — aliasing them would clobber it.
         input_output_aliases={1: 0, 2: 1, 3: 2},
@@ -481,6 +493,14 @@ def _body_fused_q8(level: int, b1: float, b2: float, eps: float,
     def _():
         acc = jnp.where(i == 0, jnp.float32(0.0), norm_ref[0, 0])
         norm_ref[0, 0] = acc + part
+        # hardware copy-out of unwritten aliased windows would clobber
+        # the state phase 1 re-reads — pass inputs through unmodified
+        # (see _body_fused)
+        p_out_ref[0] = p_ref[0]
+        qm_out_ref[0] = qm_ref[0]
+        sm_out_ref[0] = sm_ref[0]
+        qv_out_ref[0] = qv_ref[0]
+        sv_out_ref[0] = sv_ref[0]
 
     @pl.when(phase == 1)
     def _():
@@ -547,8 +567,9 @@ def gwt_adam_tile_fused_q8(g: jax.Array, p: jax.Array, qm: jax.Array,
             jax.ShapeDtypeStruct((L, 1), jnp.float32),
         ],
         # in-place p and int8 payload/scale updates (reads precede writes
-        # within each phase-1 tile; phase 0 only reads).  prev_norm is
-        # deliberately NOT aliased to new_norm — see gwt_adam_tile_fused.
+        # within each tile; phase 0 writes the inputs through unchanged).
+        # prev_norm is deliberately NOT aliased to new_norm — see
+        # gwt_adam_tile_fused.
         input_output_aliases={1: 0, 2: 1, 3: 2, 4: 3, 5: 4},
         interpret=interpret,
     )(g, p, qm, sm3, qv, sv3, saltm2, saltv2, pn2, ss2, wd2)

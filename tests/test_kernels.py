@@ -237,6 +237,68 @@ def test_fused_write_q8_nontileable_falls_back_to_oracle():
         np.asarray(a), np.asarray(b)), si, sj)
 
 
+# ---------------------------------------------------------------------------
+# Hardware (non-interpret) parity leg: interpret mode preserves unwritten
+# output windows on revisit, which masks copy-out hazards in the two-phase
+# limiter pass (a phase-0 grid step that skips its aliased p/m/v output
+# blocks clobbers the state phase 1 re-reads on real TPUs).  These tests
+# re-run the fused-write contract with impl='pallas' on hardware, with
+# gm > 1 row tiles and the limiter on — the configuration that hazard
+# corrupts.  Skipped off-TPU (the REPRO_KERNEL_IMPL backlog tier).
+# ---------------------------------------------------------------------------
+
+needs_tpu = pytest.mark.skipif(jax.default_backend() != "tpu",
+                               reason="hardware Pallas parity needs a TPU")
+
+
+@needs_tpu
+@pytest.mark.parametrize("use_limiter", [True, False])
+def test_fused_write_hardware_pallas_vs_staged_oracle(use_limiter):
+    L, m, n, level = 2, 256, 2048, 2
+    assert m // kg.fused_row_block(m, n, level) > 1  # multi-tile leaves
+    g, p, st, pn = _fused_write_inputs(L, m, n, level)
+    kw = _fused_write_kw(level, use_limiter=use_limiter)
+    pi, ni, si = gops.fused_write_update(g, p, st, jnp.int32(2), pn,
+                                         impl="pallas", **kw)
+    pj, nj, sj = gops.fused_write_update(g, p, st, jnp.int32(2), pn,
+                                         impl="jnp", **kw)
+    # Mosaic and XLA:TPU may contract FMAs differently, so hardware pins
+    # allclose rather than the interpret tier's bitwise equality — still
+    # far tighter than the garbage an output-window clobber produces.
+    np.testing.assert_allclose(np.asarray(ni), np.asarray(nj),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(si["m"]), np.asarray(sj["m"]),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(si["v"]), np.asarray(sj["v"]),
+                               rtol=1e-5, atol=1e-7)
+    _assert_write_parity(pi, pj, p, slack=8)
+
+
+@needs_tpu
+def test_fused_write_q8_hardware_pallas_vs_staged_oracle():
+    L, m, n, level = 2, 256, 2048, 2
+    assert m // kg.q8_row_block(m, n, level, 64) > 1
+    g, p, _, pn = _fused_write_inputs(L, m, n, level)
+    st, key, leaf_ids = _q8_encoded_state(L, m, n >> level)
+    kw = _fused_write_kw(level)
+    pi, ni, si = gops.fused_write_update_q8(
+        g, p, st, jnp.int32(1), key, leaf_ids, pn, impl="pallas", **kw)
+    pj, nj, sj = gops.fused_write_update_q8(
+        g, p, st, jnp.int32(1), key, leaf_ids, pn, impl="jnp", **kw)
+    np.testing.assert_allclose(np.asarray(ni), np.asarray(nj),
+                               rtol=1e-5, atol=1e-6)
+    # an ulp of pre-quant drift can flip a stochastic-rounding bit, so
+    # int8 payloads get a ±1-code budget; scales stay allclose
+    for tag in ("m", "v"):
+        qi = np.asarray(si[tag]["q"], np.int32)
+        qj = np.asarray(sj[tag]["q"], np.int32)
+        assert np.abs(qi - qj).max() <= 1, tag
+        np.testing.assert_allclose(np.asarray(si[tag]["scale"]),
+                                   np.asarray(sj[tag]["scale"]),
+                                   rtol=1e-6, atol=0, err_msg=tag)
+    _assert_write_parity(pi, pj, p, slack=8)
+
+
 def test_wire_dwt_quantize_pack_bitwise_vs_jnp():
     """The wire-path sibling fusion: haar_dwt_fwd_q emits (A f32,
     D bf16/f8) in one launch, bitwise vs the jnp reduce_terms split."""
