@@ -67,6 +67,11 @@ echo "== tokens/sec on the mixed-length workload, or if int8 KV greedy =="
 echo "== agreement with f32 drops below 95%) =="
 python -m benchmarks.run --only serve --quick
 
+echo "== observability: on-device taps + telemetry overhead (fails if =="
+echo "== the tapped loop drops below 98% of the taps-off steps/sec, or =="
+echo "== if the emitted JSONL/Chrome-trace artifacts are malformed) =="
+python -m benchmarks.run --only obs --quick
+
 if [[ "${1:-}" == "--quick" ]]; then
     exit 0
 fi

@@ -209,6 +209,33 @@ def gwt(lr: Schedule | float,
                 new_p = jnp.swapaxes(new_p, -1, -2)
             return new_p, {"host": hstate, "prev_norm": new_norm}
 
+        def taps(g_stk, p_stk, new_p_stk, old_st, new_st, step):
+            # Observability taps (DESIGN.md §12), traced only inside
+            # tapped_update (the TrainLoop runs it once per chunk, on the
+            # log_every boundary step).  Band energies come from the
+            # approx averaging chain alone: the DHT is orthonormal, so
+            # the detail energy is Parseval's remainder ssq(g) - ssq(A_l)
+            # — no detail bands materialized.  Limiter taps piggyback on
+            # the norm pass the update already ran — ``prev_norm`` IS the
+            # fused kernel's norm output — so the post-limit update norm
+            # and clip rate cost no new passes.
+            gt = jnp.swapaxes(g_stk, -1, -2) if swap else g_stk
+            gt32 = gt.astype(jnp.float32)
+            a = haar.haar_approx(gt32, level) if wavelet == "haar" \
+                else fwd(gt32, level)[0]
+            band_a = jnp.sum(a * a)
+            out = {"band_a_ssq": band_a,
+                   "band_d_ssq": jnp.sum(gt32 * gt32) - band_a}
+            if use_limiter:
+                old_pn = old_st["prev_norm"]
+                new_pn = new_st["prev_norm"]
+                clipped = limiter.clip_flags(old_pn, new_pn, gamma)
+                nleaves = g_stk.shape[0]
+                out["gnorm_ssq"] = jnp.sum(new_pn * new_pn)
+                out["clip_count"] = jnp.sum(clipped.astype(jnp.float32))
+                out["clip_rate"] = out["clip_count"] / jnp.float32(nleaves)
+            return out
+
         vu, native = None, False
         if use_fused and fused_write:
             vu, native = (vector_update_q8, True) if quant \
@@ -216,7 +243,7 @@ def gwt(lr: Schedule | float,
         return engine.LeafRule(
             kind=mode, init=init, update=update, vector_update=vu,
             slots={"host": h.slots, "prev_norm": False},
-            codec_native=native)
+            codec_native=native, taps=taps)
 
     gwt_last = make_gwt_rule(_Mode.LAST)
     gwt_first = make_gwt_rule(_Mode.FIRST)

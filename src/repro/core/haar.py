@@ -51,6 +51,25 @@ def haar_forward(g: jax.Array, level: int) -> Tuple[jax.Array, List[jax.Array]]:
     return a, details
 
 
+def haar_approx(g: jax.Array, level: int) -> jax.Array:
+    """Approx band ``A_l`` only — the averaging chain of
+    :func:`haar_forward` without materializing the detail bands.
+
+    Op-for-op the same computation as ``haar_forward``'s ``a`` path, so
+    the result is bitwise equal to ``haar_forward(g, level)[0]`` at half
+    the per-level work.  Used by the observability taps (DESIGN.md §12),
+    which recover the detail energy via Parseval
+    (``ssq(D*) = ssq(g) - ssq(A_l)`` — the DHT is orthonormal) instead
+    of computing the bands.
+    """
+    _check(g.shape[-1], level)
+    a = g
+    for _ in range(level):
+        x = a.reshape(*a.shape[:-1], a.shape[-1] // 2, 2)
+        a = (x[..., 0] + x[..., 1]) * INV_SQRT2
+    return a
+
+
 def haar_inverse(a: jax.Array, details: Sequence[jax.Array]) -> jax.Array:
     """Inverse of :func:`haar_forward` (paper Eq. (1))."""
     x = a

@@ -32,3 +32,20 @@ def limit(update: jax.Array, prev_norm: jax.Array, gamma: float = DEFAULT_GAMMA
     limited = update * scale.astype(update.dtype)
     new_prev = jnp.where(norm > 0, norm * scale, prev_norm)
     return limited, new_prev.astype(jnp.float32)
+
+
+def clip_flags(prev_norm: jax.Array, new_norm: jax.Array,
+               gamma: float = DEFAULT_GAMMA) -> jax.Array:
+    """Did :func:`limit` clip, reconstructed from the norms it threads?
+
+    When a step clips, ``new_prev = norm · (γ·prev/norm) = γ·prev`` up to
+    one f32 rounding of the multiply chain; unclipped steps land at
+    ``norm ≤ γ·prev`` strictly *below* that product except exactly at the
+    boundary (where no scaling happens and the flag is a don't-care).  So
+    ``new ≥ γ·prev·(1−2⁻²⁰)`` with ``prev > 0`` detects the clip without
+    storing a separate flag — this is the observability tap's detector
+    (DESIGN.md §12), reading the fused kernel's norm-pass output instead
+    of adding state.  Elementwise over stacked ``(L,)`` norm vectors.
+    """
+    margin = jnp.float32(1.0 - 2.0 ** -20)
+    return (prev_norm > 0) & (new_norm >= gamma * prev_norm * margin)

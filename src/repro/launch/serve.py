@@ -155,7 +155,22 @@ def main(argv=None):
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--kernel-impl", default="auto",
                     choices=["auto", "pallas", "interpret", "jnp"])
+    ap.add_argument("--metrics-dir", default="",
+                    help="telemetry directory (sibling of train "
+                         "--metrics-dir): per-request JSONL records -> "
+                         "<dir>/metrics.jsonl (emitted at retirement, so "
+                         "a killed run keeps its completed requests) and "
+                         "per-tick Chrome-trace spans/counters (queue "
+                         "depth, slot occupancy, page-arena utilization) "
+                         "-> <dir>/trace.json")
     args = ap.parse_args(argv)
+    from repro import obs
+    tel = obs.configure(args.metrics_dir or None,
+                        run={"cmd": "serve", "arch": args.arch,
+                             "ckpt": args.ckpt, "requests": args.requests,
+                             "num_slots": args.num_slots,
+                             "kv_quant": args.kv_quant,
+                             "static": args.static, "seed": args.seed})
     ctx = MeshContext.create(kernel_impl=args.kernel_impl)
 
     cfg = (configs.get_smoke(args.arch) if args.smoke
@@ -181,11 +196,15 @@ def main(argv=None):
                      ctx=ctx)
     reqs = build_workload(args.requests, cfg.vocab, args.prompt_len,
                           args.gen, args.rate, args.seed)
-    eng.warmup()
-    stats = eng.run(reqs, static=args.static)
-    stats["kv_arena_bytes"] = eng.kv_bytes()
-    stats["mode"] = "static" if args.static else "continuous"
-    print(json.dumps(stats, indent=2, sort_keys=True))
+    try:
+        eng.warmup()
+        stats = eng.run(reqs, static=args.static)
+        stats["kv_arena_bytes"] = eng.kv_bytes()
+        stats["mode"] = "static" if args.static else "continuous"
+        tel.emit("serve_summary", **stats)
+        print(json.dumps(stats, indent=2, sort_keys=True))
+    finally:
+        obs.shutdown()   # writes <metrics-dir>/trace.json
     return stats
 
 

@@ -28,7 +28,7 @@ import math
 
 import jax
 
-from repro import configs, optim
+from repro import configs, obs, optim
 from repro.checkpoint.manager import CheckpointManager
 from repro.data.pipeline import make_source
 from repro.distributed.compression import DPReduceSpec
@@ -147,7 +147,24 @@ def main(argv=None):
                     choices=["auto", "pallas", "interpret", "jnp"],
                     help="fused-kernel backend (auto: pallas on TPU, "
                          "jnp elsewhere; REPRO_KERNEL_IMPL also works)")
+    ap.add_argument("--metrics-dir", default="",
+                    help="telemetry directory (DESIGN.md §12): JSONL "
+                         "metric records -> <dir>/metrics.jsonl, Chrome-"
+                         "trace spans -> <dir>/trace.json (open in "
+                         "Perfetto), and the on-device training-dynamics "
+                         "taps (band energy, clip rate, update norms) "
+                         "joined to the step metrics.  Unset: telemetry "
+                         "compiles away — training numerics stay "
+                         "bitwise-identical")
     args = ap.parse_args(argv)
+
+    tel = obs.configure(args.metrics_dir or None,
+                        run={"cmd": "train", "arch": args.arch,
+                             "optimizer": args.optimizer,
+                             "level": args.level, "host": args.host,
+                             "state_codec": args.state_codec,
+                             "steps": args.steps, "seed": args.seed,
+                             "finetune": args.finetune})
 
     dp_spec = DPReduceSpec.parse(args.dp_reduce, args.dp_level,
                                  args.dp_detail_dtype,
@@ -187,8 +204,9 @@ def main(argv=None):
                      "`python -m repro.data.build_corpus`)")
         corpus_vocab = TokenStore(args.corpus_dir).vocab_size
         if corpus_vocab > cfg.vocab:
-            print(f"model vocab {cfg.vocab} -> {corpus_vocab} "
-                  f"(corpus tokenizer)")
+            tel.log(f"model vocab {cfg.vocab} -> {corpus_vocab} "
+                    f"(corpus tokenizer)", kind="vocab_grow",
+                    old=cfg.vocab, new=corpus_vocab)
             cfg = cfg.with_(vocab=corpus_vocab)
     mod = encdec if cfg.arch_class == "encdec" else lm
     key = jax.random.key(args.seed)
@@ -204,8 +222,9 @@ def main(argv=None):
         base_params, base_step = CheckpointManager(
             args.base_ckpt).restore_params(None, params)
         params = base_params
-        print(f"restored pre-trained base from {args.base_ckpt} "
-              f"(step {base_step})")
+        tel.log(f"restored pre-trained base from {args.base_ckpt} "
+                f"(step {base_step})", kind="base_restore",
+                ckpt=args.base_ckpt, step=base_step)
 
     # Encoder-decoder batches carry the audio-frontend frame stub; the
     # adapter lives in the pipeline (WithEncoderFrames), not a monkey-patch.
@@ -254,9 +273,12 @@ def main(argv=None):
                              jax.random.fold_in(key, 777))
         optimizer = lora.wrap_optimizer(optimizer)
         n_adapter = sum(x.size for x in jax.tree.leaves(params["lora"]))
-        print(f"finetune=lora rank={args.lora_rank} alpha={args.lora_alpha} "
-              f"adapters={n_adapter/1e3:.1f}K params "
-              f"({n_adapter/max(n_params, 1):.4f} of base)")
+        tel.log(f"finetune=lora rank={args.lora_rank} "
+                f"alpha={args.lora_alpha} "
+                f"adapters={n_adapter/1e3:.1f}K params "
+                f"({n_adapter/max(n_params, 1):.4f} of base)",
+                kind="finetune", rank=args.lora_rank,
+                alpha=args.lora_alpha, adapter_params=n_adapter)
 
     opt_shardings = None
     if shardings is not None:
@@ -288,23 +310,27 @@ def main(argv=None):
     from repro.optim.engine import state_bytes
     mem_bytes = state_bytes(optimizer, params)
     adam_f32_bytes = state_bytes(optim.make("adam", lr=args.lr), base_like)
-    print(f"arch={cfg.name} params={n_params/1e6:.1f}M "
-          f"optimizer={args.optimizer} codec={args.state_codec} "
-          f"opt_state={mem_bytes/2**20:.2f}MiB "
-          f"({adam_f32_bytes/max(mem_bytes, 1):.1f}x smaller than "
-          f"full-Adam f32 {adam_f32_bytes/2**20:.2f}MiB)")
+    tel.log(f"arch={cfg.name} params={n_params/1e6:.1f}M "
+            f"optimizer={args.optimizer} codec={args.state_codec} "
+            f"opt_state={mem_bytes/2**20:.2f}MiB "
+            f"({adam_f32_bytes/max(mem_bytes, 1):.1f}x smaller than "
+            f"full-Adam f32 {adam_f32_bytes/2**20:.2f}MiB)",
+            kind="memory", params=n_params, opt_state_bytes=mem_bytes,
+            adam_f32_bytes=adam_f32_bytes)
     if dp_spec is not None:
         from repro.distributed.compression import tree_wire_bytes
         grads_abs = jax.tree.map(
             lambda p: jax.ShapeDtypeStruct(p.shape, p.dtype), params)
         full = tree_wire_bytes(grads_abs, None)
         now = tree_wire_bytes(grads_abs, dp_spec)
-        print(f"dp_reduce={args.dp_reduce} dp={ctx.dp_size} "
-              f"wire={now/2**20:.1f}MiB/step vs exact {full/2**20:.1f}MiB "
-              f"({full/now:.2f}x)")
+        tel.log(f"dp_reduce={args.dp_reduce} dp={ctx.dp_size} "
+                f"wire={now/2**20:.1f}MiB/step vs exact "
+                f"{full/2**20:.1f}MiB ({full/now:.2f}x)",
+                kind="dp_wire", wire_bytes=now, exact_bytes=full)
 
     # Raw (un-jitted) step: TrainLoop compiles it inside its donated
     # scan-over-chunk superstep (runtime/fault_tolerance.py).
+    tap_step = None
     if finetune_lora:
         from repro.models import lora
         train_step = lora.make_train_step(mod, cfg, optimizer,
@@ -312,10 +338,18 @@ def main(argv=None):
                                           alpha=args.lora_alpha,
                                           accum_steps=args.accum, ctx=ctx)
     else:
-        train_step = mod.make_train_step(cfg, optimizer,
-                                         accum_steps=args.accum,
-                                         ctx=ctx, dp_reduce=dp_spec,
-                                         shardings=shardings)
+        # on-device taps ride with --metrics-dir; the sharded dp_reduce
+        # step has no tapped channel yet, so mesh runs keep spans/records
+        # but skip taps.  The tapped variant is a SECOND step fn handed
+        # to TrainLoop: it runs only on each chunk's boundary step, so
+        # the tap reductions never touch the scanned hot path.
+        step_kw = dict(accum_steps=args.accum, ctx=ctx,
+                       dp_reduce=dp_spec, shardings=shardings)
+        train_step = mod.make_train_step(cfg, optimizer, **step_kw)
+        if args.metrics_dir and dp_spec is None \
+                and getattr(optimizer, "tapped_update", None) is not None:
+            tap_step = mod.make_train_step(cfg, optimizer, taps=True,
+                                           **step_kw)
     run_meta = {"data": data_meta, "state_codec": args.state_codec}
     if finetune_lora:
         # serving reads this to auto-merge the adapters back into the
@@ -324,6 +358,9 @@ def main(argv=None):
                                 "alpha": args.lora_alpha}
     ckpt = CheckpointManager(args.ckpt_dir, run_meta=run_meta) \
         if args.ckpt_dir else None
+    # stamp the metrics stream with the same provenance the checkpoint
+    # manifest records (data hash, codec, finetune config)
+    tel.emit("run_meta", **run_meta)
     start = 0
     if args.resume and ckpt is not None and ckpt.latest_step() is not None:
         from repro.checkpoint.manager import StructureMismatch
@@ -374,7 +411,8 @@ def main(argv=None):
             if legacy:
                 state["opt"] = optimizer.engine.migrate_legacy(state["opt"],
                                                                params)
-                print("migrated legacy per-leaf optimizer state -> buckets")
+                tel.log("migrated legacy per-leaf optimizer state -> "
+                        "buckets", kind="migrate")
                 if args.state_codec != "f32":
                     f32_opt = make_optimizer(args.optimizer, args.lr,
                                              args.steps,
@@ -382,18 +420,20 @@ def main(argv=None):
                                                 "state_codec": "f32"})
                     state["opt"] = engine_mod.transcode(
                         state["opt"], params, f32_opt, optimizer)
-                    print(f"transcoded optimizer state f32 -> "
-                          f"{args.state_codec}")
+                    tel.log(f"transcoded optimizer state f32 -> "
+                            f"{args.state_codec}", kind="transcode",
+                            src="f32", dst=args.state_codec)
             else:
                 state["opt"] = engine_mod.transcode(
                     state["opt"], params, saved_opt, optimizer)
-                print(f"transcoded optimizer state {saved_codec} -> "
-                      f"{args.state_codec}")
+                tel.log(f"transcoded optimizer state {saved_codec} -> "
+                        f"{args.state_codec}", kind="transcode",
+                        src=saved_codec, dst=args.state_codec)
                 if opt_shardings is not None:
                     state["opt"] = jax.device_put(state["opt"],
                                                   opt_shardings)
         params, opt_state = state["params"], state["opt"]
-        print(f"resumed from step {start}")
+        tel.log(f"resumed from step {start}", kind="resume", step=start)
 
     evaluator = None
     if args.eval_every:
@@ -416,24 +456,31 @@ def main(argv=None):
                      num_workers=args.workers,
                      evaluator=evaluator, eval_every=args.eval_every,
                      batch_shardings=None if shardings is None
-                     else shardings.batch)
-    with ctx.activate():
-        params, opt_state, losses = loop.run(params, opt_state,
-                                             start_step=start,
-                                             num_steps=args.steps)
-    wd = loop.watchdog.summary()
-    if wd["dispatch_s_per_step"] is not None:
-        print(f"dispatch={wd['dispatch_s_per_step']*1e3:.1f}ms/step "
-              f"blocked={(wd['blocked_s_per_step'] or 0)*1e3:.1f}ms/step "
-              f"incidents={wd['incidents']}")
-    if losses:
-        k = max(1, len(losses) // 10)
-        print(f"final loss (mean of last {k}): "
-              f"{sum(losses[-k:]) / k:.4f}")
-    if evaluator is not None and evaluator.history:
-        s, v = evaluator.history[-1]
-        print(f"final eval (step {s}): loss={v:.4f} "
-              f"ppl={math.exp(min(v, 30.0)):.2f}")
+                     else shardings.batch, tap_step=tap_step)
+    try:
+        with ctx.activate():
+            params, opt_state, losses = loop.run(params, opt_state,
+                                                 start_step=start,
+                                                 num_steps=args.steps)
+        wd = loop.watchdog.summary()
+        if wd["dispatch_s_per_step"] is not None:
+            print(f"dispatch={wd['dispatch_s_per_step']*1e3:.1f}ms/step "
+                  f"blocked={(wd['blocked_s_per_step'] or 0)*1e3:.1f}"
+                  f"ms/step incidents={wd['incidents']}")
+        if losses:
+            k = max(1, len(losses) // 10)
+            tel.log(f"final loss (mean of last {k}): "
+                    f"{sum(losses[-k:]) / k:.4f}", kind="final_loss",
+                    loss=sum(losses[-k:]) / k, window=k)
+        if evaluator is not None and evaluator.history:
+            s, v = evaluator.history[-1]
+            tel.log(f"final eval (step {s}): loss={v:.4f} "
+                    f"ppl={math.exp(min(v, 30.0)):.2f}", kind="final_eval",
+                    step=s, loss=float(v))
+    finally:
+        # writes <metrics-dir>/trace.json and closes the JSONL sink (a
+        # no-op for the null telemetry); resets the process-global handle
+        obs.shutdown()
     return params, opt_state, losses
 
 

@@ -173,23 +173,30 @@ def loss_fn(cfg, params, batch, ctx: MeshContext = None) -> jax.Array:
 
 def make_train_step(cfg, optimizer, accum_steps: int = 1,
                     ctx: MeshContext = None, donate: bool = False,
-                    dp_reduce=None, shardings=None, loss=None):
+                    dp_reduce=None, shardings=None, loss=None,
+                    taps: bool = False):
     """``donate=True`` jits with ``donate_argnums=(0, 1)`` — same
     single-buffered params/opt-state contract as ``lm.make_train_step``;
     ``dp_reduce`` switches to the mesh-aware sharded path (shard_map DP
     gradient reduction — see ``lm.make_sharded_train_step``) with this
     module's encoder-decoder loss; ``loss=`` swaps the objective (the
-    LoRA merged-forward path)."""
+    LoRA merged-forward path); ``taps=True`` adds the optimizer's
+    per-bucket observability scalars as ``metrics["taps"]`` (same
+    contract as ``lm.make_train_step``, DESIGN.md §12)."""
     from repro.models.lm import make_sharded_train_step, microbatch_split
     loss = loss_fn if loss is None else loss
     if isinstance(dp_reduce, str):
         from repro.distributed.compression import DPReduceSpec
         dp_reduce = DPReduceSpec.parse(dp_reduce)  # 'none' -> None
     if dp_reduce is not None:
+        if taps:
+            raise ValueError("taps=True is not supported on the sharded "
+                             "dp_reduce path")
         return make_sharded_train_step(cfg, optimizer, loss, ctx=ctx,
                                        dp_reduce=dp_reduce,
                                        accum_steps=accum_steps,
                                        shardings=shardings, donate=donate)
+    taps = taps and getattr(optimizer, "tapped_update", None) is not None
 
     def train_step(params, opt_state, batch):
         c = ctx if ctx is not None else MeshContext.ambient()
@@ -205,6 +212,11 @@ def make_train_step(cfg, optimizer, accum_steps: int = 1,
         g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
         (gsum, lsum), _ = jax.lax.scan(accum_body, (g0, jnp.zeros(())), micro)
         grads = jax.tree.map(lambda g: (g / accum_steps).astype(cfg.dtype), gsum)
+        if taps:
+            new_params, new_opt, tp = optimizer.tapped_update(
+                grads, opt_state, params)
+            return new_params, new_opt, {"loss": lsum / accum_steps,
+                                         "taps": tp}
         new_params, new_opt = optimizer.update(grads, opt_state, params)
         return new_params, new_opt, {"loss": lsum / accum_steps}
     if donate:

@@ -610,7 +610,7 @@ def make_sharded_train_step(cfg, optimizer, loss, *, ctx: MeshContext,
 def make_train_step(cfg, optimizer, accum_steps: int = 1,
                     grad_shardings=None, ctx: MeshContext = None,
                     donate: bool = False, dp_reduce=None, shardings=None,
-                    loss=None):
+                    loss=None, taps: bool = False):
     """Gradient-accumulated train step: ``batch`` is the GLOBAL batch; a
     shard-preserving reshape feeds a microbatch ``lax.scan``.
 
@@ -632,16 +632,28 @@ def make_train_step(cfg, optimizer, accum_steps: int = 1,
     state memory without it).  The caller must rebind, not reuse, the
     arrays it passes in.  ``donate=False`` keeps the historical behaviour
     of returning the raw traceable function.
+
+    ``taps=True`` routes the update through the optimizer's
+    ``tapped_update`` channel (``repro.optim.engine``; DESIGN.md §12) and
+    adds the per-bucket observability scalars to the metrics dict as
+    ``metrics["taps"]`` — same trace, no extra launches.  Ignored (with
+    tap-free metrics) when the optimizer exposes no tapped channel; not
+    threaded through the sharded ``dp_reduce`` path.
     """
     loss = loss_fn if loss is None else loss  # `loss=`: swap the objective
     if isinstance(dp_reduce, str):
         from repro.distributed.compression import DPReduceSpec
         dp_reduce = DPReduceSpec.parse(dp_reduce)  # 'none' -> None
     if dp_reduce is not None:
+        if taps:
+            raise ValueError("taps=True is not supported on the sharded "
+                             "dp_reduce path — run taps-off or drop "
+                             "dp_reduce")
         return make_sharded_train_step(cfg, optimizer, loss, ctx=ctx,
                                        dp_reduce=dp_reduce,
                                        accum_steps=accum_steps,
                                        shardings=shardings, donate=donate)
+    taps = taps and getattr(optimizer, "tapped_update", None) is not None
 
     def train_step(params, opt_state, batch):
         # resolve the ambient fallback at trace time, not build time: the
@@ -665,6 +677,11 @@ def make_train_step(cfg, optimizer, accum_steps: int = 1,
                               grad_shardings)
         (gsum, lsum), _ = jax.lax.scan(accum_body, (g0, jnp.zeros(())), micro)
         grads = jax.tree.map(lambda g: (g / accum_steps).astype(cfg.dtype), gsum)
+        if taps:
+            new_params, new_opt, tp = optimizer.tapped_update(
+                grads, opt_state, params)
+            return new_params, new_opt, {"loss": lsum / accum_steps,
+                                         "taps": tp}
         new_params, new_opt = optimizer.update(grads, opt_state, params)
         return new_params, new_opt, {"loss": lsum / accum_steps}
 

@@ -28,6 +28,12 @@ class Optimizer(NamedTuple):
     # exposes plan()/legacy_like()/migrate_legacy() for checkpoint migration
     # and per-bucket sharding.  None for hand-rolled optimizers.
     engine: Any = None
+    # Optional tapped channel: ``(grads, state, params) -> (new_params,
+    # new_state, taps)`` where ``taps`` is a flat dict of f32 scalars
+    # ("<bucket>/<metric>") computed in the same trace as the update
+    # (repro.optim.engine attaches it; DESIGN.md §12).  ``update`` stays
+    # the tap-free graph, so not calling this costs nothing.
+    tapped_update: Any = None
 
 
 def path_str(path) -> str:

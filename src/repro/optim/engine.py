@@ -84,6 +84,14 @@ class LeafRule(NamedTuple):
       passes the encoded bucket straight through instead of wrapping with
       generic decode/encode (the fused GWT-Adam q8 kernel requantizes in
       its epilogue).
+    * ``taps`` — optional observability hook ``(g_stk, p_stk, new_p_stk,
+      old_state_stk, new_state_stk, step) -> {name: f32 scalar}`` adding
+      rule-specific scalars (wavelet band energy, limiter clip count) to
+      the bucket's generic taps.  States arrive in *stored* layout —
+      encoded slots stay encoded — so taps piggyback on already-computed
+      results (e.g. the fused kernel's ``prev_norm`` pass) instead of
+      re-deriving them.  Only runs inside ``Optimizer.tapped_update``;
+      the plain ``update`` graph never traces it (DESIGN.md §12).
     """
 
     kind: str
@@ -93,6 +101,7 @@ class LeafRule(NamedTuple):
     vector_update: Optional[Callable[..., Tuple[jax.Array, Any]]] = None
     slots: Any = None
     codec_native: bool = False
+    taps: Optional[Callable[..., Any]] = None
 
 
 class Bucket(NamedTuple):
@@ -261,6 +270,32 @@ def _encode_stacked(codec, mask, st, key, step, lids):
                                              lid))(st, lids)
 
 
+def _codec_taps(ns) -> dict:
+    """Generic int8-substrate taps from an *encoded* stacked bucket state:
+    saturation rate (fraction of ``q`` codes at the ±127 rails — persistent
+    saturation means the blocked absmax scale is pinned by outliers) and
+    the max block absmax (``scale·127``).  Empty for unencoded buckets."""
+    sat = None
+    total = 0
+    absmax = None
+    for path, leaf in zip(*flatten_with_paths(ns)[:2]):
+        tail = path.rsplit("/", 1)[-1]
+        if tail == "q" and leaf.dtype == jnp.int8:
+            hits = jnp.sum((jnp.abs(leaf.astype(jnp.int32)) >= 127)
+                           .astype(jnp.float32))
+            sat = hits if sat is None else sat + hits
+            total += int(leaf.size)
+        elif tail == "scale" and leaf.dtype == jnp.float32:
+            mx = jnp.max(leaf)
+            absmax = mx if absmax is None else jnp.maximum(absmax, mx)
+    if total == 0:
+        return {}
+    out = {"q8_sat_rate": sat / jnp.float32(total)}
+    if absmax is not None:
+        out["q8_absmax"] = absmax * jnp.float32(127.0)
+    return out
+
+
 def build(assign: Callable[[str, Any], LeafRule],
           bucketed: bool = True, state_shardings=None,
           codec="f32", codec_seed: int = 0) -> Optimizer:
@@ -308,7 +343,10 @@ def build(assign: Callable[[str, Any], LeafRule],
             out["codec_key"] = eng.codec_key()
         return out
 
-    def update(grads, state, params):
+    def _run(grads, state, params, with_taps: bool):
+        # ``with_taps`` is a Python-level flag resolved at trace time: the
+        # False trace is op-for-op the pre-taps update graph, so the plain
+        # ``update`` channel stays bitwise-identical (DESIGN.md §12).
         step = state["step"]
         key = state.get("codec_key")
         plan = eng.plan(params)
@@ -316,6 +354,7 @@ def build(assign: Callable[[str, Any], LeafRule],
         pleaves = jax.tree_util.tree_leaves(params)
         new_leaves = [None] * plan.n_leaves
         new_buckets = {}
+        taps: dict = {}
         for b in plan.buckets:
             st = state["buckets"][b.name]
             lids = jnp.asarray(b.indices, jnp.int32)
@@ -360,15 +399,40 @@ def build(assign: Callable[[str, Any], LeafRule],
                         return None, leaf_update(g, p, s, lid)
                     _, (np_stk, ns) = jax.lax.scan(
                         body, None, (g_stk, p_stk, st, lids))
+                if with_taps:
+                    g32 = g_stk.astype(jnp.float32)
+                    d32 = (np_stk.astype(jnp.float32)
+                           - p_stk.astype(jnp.float32))
+                    tp = {"grad_ssq": jnp.sum(g32 * g32),
+                          "update_ssq": jnp.sum(d32 * d32)}
+                    if coded:
+                        tp.update(_codec_taps(ns))
+                    if b.rule.taps is not None:
+                        tp.update(b.rule.taps(g_stk, p_stk, np_stk, st, ns,
+                                              step))
+                    for k, v in tp.items():
+                        taps[f"{b.name}/{k}"] = jnp.asarray(v, jnp.float32)
             new_buckets[b.name] = _constrain_bucket(ns, hints.get(b.name))
             for j, i in enumerate(b.indices):
                 new_leaves[i] = np_stk[j]
         out = {"step": step + 1, "buckets": new_buckets}
         if quant:
             out["codec_key"] = key
-        return jax.tree_util.tree_unflatten(treedef, new_leaves), out
+        return jax.tree_util.tree_unflatten(treedef, new_leaves), out, taps
 
-    return Optimizer(init, update, engine=eng)
+    def update(grads, state, params):
+        new_params, out, _ = _run(grads, state, params, with_taps=False)
+        return new_params, out
+
+    def tapped_update(grads, state, params):
+        """``update`` plus per-bucket observability scalars — the on-device
+        tap channel (DESIGN.md §12).  Taps need the stacked grads/params
+        only the bucketed path materializes, so the unrolled reference
+        engine exposes no tapped channel."""
+        return _run(grads, state, params, with_taps=True)
+
+    return Optimizer(init, update, engine=eng,
+                     tapped_update=tapped_update if bucketed else None)
 
 
 def transcode(state, params, src: Optimizer, dst: Optimizer):

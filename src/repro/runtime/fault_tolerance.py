@@ -41,7 +41,10 @@ from __future__ import annotations
 
 import signal
 import time
+from collections import deque
 from typing import Callable, List, Optional
+
+from repro import obs
 
 
 class PreemptionHandler:
@@ -77,26 +80,49 @@ class StepWatchdog:
     ``slow_factor×EMA`` is logged with a monotonically-increasing incident
     id.  ``ema`` (dispatch) keeps its pre-split name for callers that only
     track one phase.
+
+    Incident *records* land in ``incident_log``, a ring buffer capped at
+    ``max_incidents`` (a pathological run — e.g. one straggling host in a
+    large pod — can flag every chunk for days; the count stays exact while
+    the records stay bounded, with ``incidents_dropped`` reporting the
+    overflow).  ``incidents`` remains the total integer count.  Each
+    incident is also emitted to the process-global metric sink
+    (``repro.obs``) as a ``watchdog_incident`` record.
     """
 
     def __init__(self, slow_factor: float = 3.0, ema_alpha: float = 0.1,
-                 log: Callable[[str], None] = print):
+                 log: Callable[[str], None] = print,
+                 max_incidents: int = 64):
         self.slow_factor = slow_factor
         self.alpha = ema_alpha
         self.ema: Optional[float] = None         # dispatch s/step
         self.block_ema: Optional[float] = None   # blocked s/step
-        self.incidents = 0
+        self._incidents = 0
+        self.incident_log: deque = deque(maxlen=max(int(max_incidents), 1))
         self.log = log
         self._t0: Optional[float] = None
         self._step = 0
 
+    @property
+    def incidents(self) -> int:
+        """Total incident count (exact even after the ring drops records)."""
+        return self._incidents
+
+    @property
+    def incidents_dropped(self) -> int:
+        return self._incidents - len(self.incident_log)
+
     def _observe(self, phase: str, step: int, per_step: float,
                  ema: Optional[float]) -> float:
         if ema is not None and per_step > self.slow_factor * ema:
-            self.incidents += 1
+            self._incidents += 1
+            rec = {"id": self._incidents, "step": step, "phase": phase,
+                   "s_per_step": per_step, "ema": ema}
+            self.incident_log.append(rec)
+            obs.get().emit("watchdog_incident", **rec)
             self.log(f"[watchdog] step {step}: {phase} {per_step:.3f}s/step"
                      f" > {self.slow_factor:.1f}x EMA {ema:.3f}s "
-                     f"(incident #{self.incidents})")
+                     f"(incident #{self._incidents})")
         return per_step if ema is None \
             else self.alpha * per_step + (1 - self.alpha) * ema
 
@@ -123,7 +149,9 @@ class StepWatchdog:
     def summary(self) -> dict:
         return {"dispatch_s_per_step": self.ema,
                 "blocked_s_per_step": self.block_ema,
-                "incidents": self.incidents}
+                "incidents": self.incidents,
+                "incidents_dropped": self.incidents_dropped,
+                "incident_log": list(self.incident_log)}
 
 
 class TrainLoop:
@@ -152,8 +180,17 @@ class TrainLoop:
                  pipelined: bool = True, donate: bool = True,
                  max_chunk: int = 16, save_final: bool = False,
                  batch_shardings=None, num_workers: int = 0,
-                 evaluator=None, eval_every: int = 0):
+                 evaluator=None, eval_every: int = 0, tap_step=None):
         self.train_step = train_step
+        # optional tapped variant (lm.make_train_step(taps=True)): the
+        # superstep scan runs it ONLY on the last iteration of each chunk
+        # (a scan-body ``lax.cond`` on the step index), so the on-device
+        # tap reductions cost 1/chunk of a per-step fusion while still
+        # landing exactly on the log_every boundary where flush() fetches
+        # them — same single dispatch, no extra launches or host syncs.
+        # None -> the superstep graph is identical to the pre-obs loop
+        # (the metrics-dir-unset bitwise guarantee).
+        self.tap_step = tap_step
         self.ckpt = ckpt
         self.data = data_source
         self.ckpt_every = ckpt_every
@@ -184,6 +221,7 @@ class TrainLoop:
         self.watchdog = StepWatchdog(log=log)
         self.preempt = PreemptionHandler()
         self._superstep = None  # built lazily, reused across run() calls
+        self._tap_keys = None   # tap names, recorded at superstep trace
         # Align the chunk grid to log_every when a reasonable divisor
         # exists: uniform chunk lengths mean ONE superstep compilation
         # instead of one per distinct length (log_every=20, max_chunk=16
@@ -222,16 +260,67 @@ class TrainLoop:
     def _build_superstep(self):
         import jax
         train_step = self.train_step
+        tap_step = self.tap_step
 
-        def superstep(params, opt_state, batches):
-            def body(carry, batch):
-                p, s = carry
-                p, s, metrics = train_step(p, s, batch)
-                return (p, s), metrics["loss"]
+        if tap_step is None:
+            def superstep(params, opt_state, batches):
+                def body(carry, batch):
+                    p, s = carry
+                    p, s, metrics = train_step(p, s, batch)
+                    return (p, s), metrics["loss"]
 
-            (params, opt_state), losses = jax.lax.scan(
-                body, (params, opt_state), batches)
-            return params, opt_state, losses
+                (params, opt_state), losses = jax.lax.scan(
+                    body, (params, opt_state), batches)
+                return params, opt_state, losses
+        else:
+            # Tapped superstep: same scan, but a lax.cond on the step
+            # index routes the LAST iteration through the tapped step.
+            # Keeping the boundary step inside the scan (vs a second
+            # dispatch, or an unrolled final step after a k-1 scan)
+            # measured cheapest on the step benchmark — one program, one
+            # dispatch, and the tap reductions run once per chunk.  Off-
+            # boundary iterations emit structural zeros for the tap ys so
+            # both cond branches return identical pytrees.  The tap dict
+            # is packed into ONE (T,) f32 vector (key order recorded at
+            # trace time) so flush()'s device_get pulls two buffers per
+            # chunk, not one per tap — a dict of ~30 scalar transfers
+            # measured >1% of segment wall clock on its own.
+            import jax.numpy as jnp
+
+            def superstep(params, opt_state, batches):
+                k = jax.tree_util.tree_leaves(batches)[0].shape[0]
+                first = jax.tree_util.tree_map(lambda v: v[0], batches)
+                spec = jax.eval_shape(
+                    lambda p, s, b: tap_step(p, s, b)[2]["taps"],
+                    params, opt_state, first)
+                keys = sorted(spec)
+                # trace-time side effect: tap names are static and
+                # identical across chunk-length retraces
+                self._tap_keys = keys
+                zeros = jnp.zeros((len(keys),), jnp.float32)
+
+                def body(carry, xs):
+                    i, batch = xs
+                    p, s = carry
+
+                    def tapped(p, s):
+                        p, s, m = tap_step(p, s, batch)
+                        vec = jnp.stack(
+                            [m["taps"][key].astype(jnp.float32)
+                             for key in keys]) if keys else zeros
+                        return p, s, m["loss"], vec
+
+                    def plain(p, s):
+                        p, s, m = train_step(p, s, batch)
+                        return p, s, m["loss"], zeros
+
+                    p, s, loss, taps = jax.lax.cond(
+                        i == k - 1, tapped, plain, p, s)
+                    return (p, s), (loss, taps)
+
+                (params, opt_state), (losses, tapmat) = jax.lax.scan(
+                    body, (params, opt_state), (jnp.arange(k), batches))
+                return params, opt_state, (losses, tapmat[-1])
 
         kw = {"donate_argnums": (0, 1)} if self.donate else {}
         return jax.jit(superstep, **kw)
@@ -261,8 +350,12 @@ class TrainLoop:
                 or step % self.eval_every:
             return
         t0 = time.monotonic()
-        r = self.evaluator(params, step)
+        tel = obs.get()
+        with tel.span("eval", step=step):
+            r = self.evaluator(params, step)
         self.watchdog.block(time.monotonic() - t0, k)
+        tel.emit("eval", step=step, loss=float(r["loss"]),
+                 ppl=float(r["ppl"]), n_batches=self.evaluator.n_batches)
         self.log(f"step {step}: eval_loss={r['loss']:.4f} "
                  f"ppl={r['ppl']:.2f} ({self.evaluator.n_batches} batches)")
 
@@ -294,8 +387,13 @@ class TrainLoop:
         if self._superstep is None:
             self._superstep = self._build_superstep()
 
+        tel = obs.get()
         losses: List[float] = []
-        window: list = []   # device (k,) loss vectors pending one host fetch
+        # device metric chunks pending one host fetch: (base_step, ys)
+        # where ys is a (k,) loss vector or, on the tapped path,
+        # ((k,) losses, (T,) tap vector sampled at the chunk's last step
+        # — names in self._tap_keys, recorded when the superstep traced)
+        window: list = []
         nwin = 0
 
         def flush():
@@ -303,10 +401,22 @@ class TrainLoop:
             if not window:
                 return
             t0 = time.monotonic()
-            vals = np.concatenate([np.asarray(v)
-                                   for v in jax.device_get(window)])
+            with tel.span("block", steps=nwin):
+                fetched = jax.device_get([ys for _, ys in window])
             self.watchdog.block(time.monotonic() - t0, nwin)
-            losses.extend(float(v) for v in vals)
+            emit = getattr(tel.sink, "enabled", True)
+            for (base, _), ys in zip(window, fetched):
+                tapped = isinstance(ys, tuple)
+                lv = np.asarray(ys[0] if tapped else ys)
+                losses.extend(float(v) for v in lv)
+                if not emit:
+                    continue
+                for j, lval in enumerate(lv):
+                    rec = {"step": base + j + 1, "loss": float(lval)}
+                    if tapped and j == len(lv) - 1:
+                        rec.update(zip(self._tap_keys,
+                                       np.asarray(ys[1], float).tolist()))
+                    tel.emit("train_step", **rec)
             window, nwin = [], 0
 
         step = start_step
@@ -326,21 +436,24 @@ class TrainLoop:
                 end = self._chunk_end(step, num_steps)
                 k = end - step
                 batches = []
-                for j in range(k):
-                    i, b = next(pf)
-                    if i != step + j:   # bit-determinism depends on this
-                        raise RuntimeError(f"data stream desync: got batch "
-                                           f"{i}, want {step + j}")
-                    batches.append(b)
-                chunk = {kk: self._place(kk, v)
-                         for kk, v in stack_batches(batches).items()}
+                with tel.span("prefetch", steps=k):
+                    for j in range(k):
+                        i, b = next(pf)
+                        if i != step + j:   # bit-determinism depends on this
+                            raise RuntimeError(
+                                f"data stream desync: got batch "
+                                f"{i}, want {step + j}")
+                        batches.append(b)
+                    chunk = {kk: self._place(kk, v)
+                             for kk, v in stack_batches(batches).items()}
                 self.watchdog.start()
-                params, opt_state, lchunk = self._superstep(params, opt_state,
-                                                            chunk)
+                with tel.span("dispatch", step=step, steps=k):
+                    params, opt_state, lchunk = self._superstep(
+                        params, opt_state, chunk)
                 dt = self.watchdog.stop(step, k,
                                         record=k in compiled_sizes)
                 compiled_sizes.add(k)
-                window.append(lchunk)
+                window.append((step, lchunk))
                 nwin += k
                 step = end
                 if self.log_every and step % self.log_every == 0:
@@ -353,7 +466,8 @@ class TrainLoop:
                 if self.ckpt is not None and self.ckpt_every \
                         and step % self.ckpt_every == 0:
                     t0 = time.monotonic()
-                    self._save(step, params, opt_state, snapshot=True)
+                    with tel.span("save", step=step):
+                        self._save(step, params, opt_state, snapshot=True)
                     last_saved = step
                     self.watchdog.block(time.monotonic() - t0, k)
                 if self.preempt.requested:
@@ -367,6 +481,9 @@ class TrainLoop:
             pf.close()
         flush()
         self._finalize(step, params, opt_state, preempted, last_saved)
+        # fold the watchdog's phase split into the sink (ring-buffered
+        # incident records included) so post-hoc analysis needs no stdout
+        tel.emit("watchdog_summary", step=step, **self.watchdog.summary())
         return params, opt_state, losses
 
     # -- pre-pipeline reference loop ---------------------------------------

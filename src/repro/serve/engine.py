@@ -48,6 +48,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.models import lm
 from repro.serve import kv as kv_lib
 
@@ -132,6 +133,7 @@ class Engine:
 
         self._chunk_step = jax.jit(chunk_step, donate_argnums=(1,))
         self._decode_step = jax.jit(decode_step, donate_argnums=(1,))
+        self._tel = obs.get()   # re-resolved per run(); see there
         self.reset()
 
     # -- bookkeeping -------------------------------------------------------
@@ -249,7 +251,19 @@ class Engine:
         self.free_pages.extend(sorted(s["pages"], reverse=True))
         self.page_table[slot, :] = kv_lib.TRASH_PAGE
         self.lens[slot] = 0
-        s["req"].t_done = now
+        req = s["req"]
+        req.t_done = now
+        # per-request record emitted AT retirement, not at end of run():
+        # a killed run leaves one usable JSONL line per completed request
+        # (the sink flushes per record), instead of losing everything to
+        # the end-of-run percentile pass.
+        self._tel.emit(
+            "serve_request", rid=req.rid, slot=slot,
+            prompt_tokens=len(req.prompt), gen_tokens=len(req.generated),
+            arrival_s=req.arrival, admit_s=req.t_admit,
+            first_token_s=req.t_first, done_s=req.t_done,
+            ttft_s=req.t_first - req.t_admit,
+            latency_s=req.t_done - req.arrival)
         s.update(state=FREE, req=None, filled=0, pages=[], last=0)
 
     def _prefill_tick(self, now) -> bool:
@@ -263,10 +277,12 @@ class Engine:
         chunk = list(req.prompt[s["filled"]:s["filled"] + C])
         real = len(chunk)
         tokens = jnp.asarray([chunk + [0] * (C - real)], jnp.int32)
-        greedy, self.pools = self._chunk_step(
-            self.params, self.pools,
-            jnp.asarray(self.page_table[slot:slot + 1]),
-            jnp.asarray([s["filled"]], jnp.int32), tokens)
+        with self._tel.span("prefill", cat="serve", slot=slot,
+                            rid=req.rid, tokens=real):
+            greedy, self.pools = self._chunk_step(
+                self.params, self.pools,
+                jnp.asarray(self.page_table[slot:slot + 1]),
+                jnp.asarray([s["filled"]], jnp.int32), tokens)
         s["filled"] += real
         if s["filled"] >= plen:
             # prompt fully paged in: its final position's greedy token is
@@ -296,9 +312,10 @@ class Engine:
             tokens[i, 0] = self.slots[i]["last"]
             pt[i] = self.page_table[i]
             ln[i] = self.lens[i]
-        greedy, self.pools = self._decode_step(
-            self.params, self.pools, jnp.asarray(pt), jnp.asarray(ln),
-            jnp.asarray(tokens))
+        with self._tel.span("decode", cat="serve", active=len(active)):
+            greedy, self.pools = self._decode_step(
+                self.params, self.pools, jnp.asarray(pt), jnp.asarray(ln),
+                jnp.asarray(tokens))
         nxt = np.asarray(greedy)
         for i in active:
             s = self.slots[i]
@@ -316,12 +333,22 @@ class Engine:
         or not the engine is keeping up).  Returns aggregate stats; the
         per-request telemetry lands on the Request objects."""
         pending = deque(sorted(requests, key=lambda r: (r.arrival, r.rid)))
+        # late-bound: the launcher configures the global Telemetry after
+        # engine construction; ticks and _retire read self._tel
+        tel = self._tel = obs.get()
         t0 = time.monotonic()
         now = lambda: time.monotonic() - t0
+        arena = max(self.num_pages - 1, 1)   # page 0 is the trash page
         while pending or any(s["state"] != FREE for s in self.slots):
             self._admit(pending, now(), static)
             busy = self._prefill_tick(now)
             busy = self._decode_tick(now, static) or busy
+            if busy and tel.tracer is not None:
+                tel.counter(
+                    "sched", cat="serve",
+                    queue_depth=sum(r.arrival <= now() for r in pending),
+                    slots_busy=sum(s["state"] != FREE for s in self.slots),
+                    page_util=1.0 - len(self.free_pages) / arena)
             if not busy and pending:
                 time.sleep(max(0.0, min(pending[0].arrival - now(), 0.02)))
         makespan = now()
@@ -329,10 +356,12 @@ class Engine:
         gen = sum(len(r.generated) for r in requests)
         pct = lambda p: lat[min(len(lat) - 1,
                                 int(p / 100.0 * len(lat)))] if lat else 0.0
-        return {"requests": len(requests),
-                "generated_tokens": gen,
-                "prompt_tokens": sum(len(r.prompt) for r in requests),
-                "makespan_s": makespan,
-                "requests_per_sec": len(requests) / makespan,
-                "tokens_per_sec": gen / makespan,
-                "p50_s": pct(50), "p99_s": pct(99)}
+        stats = {"requests": len(requests),
+                 "generated_tokens": gen,
+                 "prompt_tokens": sum(len(r.prompt) for r in requests),
+                 "makespan_s": makespan,
+                 "requests_per_sec": len(requests) / makespan,
+                 "tokens_per_sec": gen / makespan,
+                 "p50_s": pct(50), "p99_s": pct(99)}
+        tel.emit("serve_run", static=static, **stats)
+        return stats
